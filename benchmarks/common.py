@@ -1,0 +1,131 @@
+"""Shared benchmark infrastructure: the 16-cell suite (the paper evaluates
+16 Halide apps; our analogue spans all 10 archs × all 4 shape families),
+algorithm runners with paper-protocol budgets, CSV emission."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.autotuner import TABLE1, autotune, make_mdp  # noqa: E402
+from repro.core.mcts import MCTSConfig  # noqa: E402
+
+# The 16 "benchmarks" (DESIGN.md §6). jamba plays ResNet50's role (the big
+# multi-stage app where real measurement is impractical).
+SUITE = [
+    ("granite-3-2b", "train_4k"),
+    ("granite-3-2b", "prefill_32k"),
+    ("granite-3-2b", "decode_32k"),
+    ("stablelm-12b", "train_4k"),
+    ("stablelm-12b", "decode_32k"),
+    ("nemotron-4-15b", "train_4k"),
+    ("nemotron-4-15b", "prefill_32k"),
+    ("deepseek-67b", "train_4k"),
+    ("deepseek-67b", "decode_32k"),
+    ("qwen2-vl-72b", "train_4k"),
+    ("qwen2-vl-72b", "prefill_32k"),
+    ("musicgen-large", "train_4k"),
+    ("granite-moe-1b-a400m", "train_4k"),
+    ("phi3.5-moe-42b-a6.6b", "train_4k"),
+    ("jamba-1.5-large-398b", "long_500k"),
+    ("falcon-mamba-7b", "long_500k"),
+]
+
+# iteration budgets scaled from the paper's 30s/10s/1s C++ budgets so one
+# full suite pass stays CPU-tractable; relative ratios preserved (×24 : ×8 : ×1)
+BUDGETS = {"30s": 32, "10s": 12, "1s": 4, "0.5s": 2}
+
+ALGOS_FIG7 = [
+    "random",
+    "greedy",
+    "beam",
+    "mcts_1s",
+    "mcts_10s",
+    "mcts_30s",
+    "mcts_Cp10_30s",
+    "mcts_sqrt2_30s",
+]
+
+
+def scaled_cfg(name: str) -> Optional[MCTSConfig]:
+    if not name.startswith("mcts"):
+        return None
+    base = TABLE1.get(name, TABLE1["mcts_30s"])
+    for suffix, iters in BUDGETS.items():
+        if name.endswith(suffix):
+            return dataclasses.replace(base, iters_per_decision=iters)
+    return base
+
+
+def run_algo(
+    arch: str,
+    shape: str,
+    algo: str,
+    seed: int = 0,
+    noise_sigma: float = 0.0,
+    noise_seed: int = 0,
+    measure_fn=None,
+    time_budget_s: Optional[float] = None,
+    n_standard: int = 15,
+    n_greedy: int = 1,
+):
+    """One search run under the paper protocol (scaled budgets).
+
+    The cost model's noise (``noise_seed``) is fixed per cell so all
+    algorithms rank against the SAME (imperfect) model; only the search
+    seed varies across repetitions."""
+    mdp = make_mdp(arch, shape, noise_sigma=noise_sigma, noise_seed=noise_seed)
+    if algo.startswith("mcts"):
+        from repro.core.ensemble import ProTuner
+
+        cfg = dataclasses.replace(scaled_cfg(algo), seed=seed)
+        tuner = ProTuner(
+            mdp,
+            n_standard=n_standard,
+            n_greedy=n_greedy,
+            mcts_config=cfg,
+            measure_fn=measure_fn if "real" in algo else None,
+            seed=seed,
+        )
+        res = tuner.run(time_budget_s=time_budget_s)
+        res.algo = algo
+        return res, mdp
+    res = autotune(arch, shape, algo=algo, seed=seed, mdp=mdp,
+                   measure_fn=measure_fn, time_budget_s=time_budget_s)
+    return res, mdp
+
+
+def best_of_seeds(arch, shape, algo, seeds=(0, 1, 2), **kw):
+    """Paper protocol: run with different seeds, report the best schedule."""
+    best = None
+    for s in seeds:
+        res, mdp = run_algo(arch, shape, algo, seed=s, **kw)
+        if best is None or res.cost < best[0].cost:
+            best = (res, mdp)
+    return best
+
+
+def true_cost(arch, shape, plan) -> float:
+    """Noise-free analytic cost of a plan (the 'would-be' step time)."""
+    return make_mdp(arch, shape).cost_model.cost(plan)
+
+
+def emit(rows: List[dict], name: str, outdir: str = "experiments/bench"):
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
+def csv_line(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def geomean(xs):
+    xs = [x for x in xs if x > 0]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0

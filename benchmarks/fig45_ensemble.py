@@ -1,0 +1,64 @@
+"""Fig. 4/5 analogue: ensemble composition ablation — X standard + Y greedy
+MCTSes (16 trees total), on four cells (the paper used bilateral_grid,
+nl_means, iir_blur, max_filter).  Reports the best exec time per mix and the
+fraction of root decisions won by greedy trees (Fig. 4's metric, which we
+log directly in ``TuneResult.decisions``)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import csv_line, emit, geomean, scaled_cfg, true_cost
+from repro.core.autotuner import make_mdp
+from repro.core.ensemble import ProTuner
+
+NOISE = 0.25
+CELLS = [
+    ("granite-3-2b", "train_4k"),
+    ("phi3.5-moe-42b-a6.6b", "train_4k"),
+    ("jamba-1.5-large-398b", "long_500k"),
+    ("deepseek-67b", "decode_32k"),
+]
+MIXES = [(16, 0), (15, 1), (12, 4), (8, 8), (0, 16)]
+
+
+def main(cells=None, seeds=(0, 1)) -> dict:
+    cells = cells or CELLS
+    rows = []
+    summary = {}
+    for arch, shape in cells:
+        per_mix = {}
+        for n_std, n_gr in MIXES:
+            best_cost, greedy_frac = float("inf"), 0.0
+            for seed in seeds:
+                mdp = make_mdp(arch, shape, noise_sigma=NOISE, noise_seed=0)
+                cfg = dataclasses.replace(scaled_cfg("mcts_10s"), seed=seed)
+                tuner = ProTuner(mdp, n_standard=n_std, n_greedy=n_gr,
+                                 mcts_config=cfg, seed=seed)
+                res = tuner.run()
+                c = true_cost(arch, shape, res.plan)
+                if c < best_cost:
+                    best_cost = c
+                    wins = [d["winner_greedy"] for d in res.decisions]
+                    greedy_frac = sum(wins) / max(len(wins), 1)
+            per_mix[f"{n_std}_{n_gr}"] = (best_cost, greedy_frac)
+        best = min(v[0] for v in per_mix.values())
+        for mix, (c, gf) in per_mix.items():
+            rows.append({"cell": f"{arch}×{shape}", "mix": mix,
+                         "exec_s": c, "speedup_vs_best": best / c,
+                         "greedy_decision_frac": gf})
+        summary[f"{arch}×{shape}"] = {
+            m: round(best / c, 4) for m, (c, _) in per_mix.items()
+        }
+        print(f"[fig45] {arch}×{shape}: " + " ".join(
+            f"{m}={best/c:.3f}(g%={gf:.2f})" for m, (c, gf) in per_mix.items()),
+            flush=True)
+    emit(rows, "fig45_ensemble")
+    # geomean speedup per mix across cells (Fig. 5 summary; paper: 15_1 best)
+    for mix in ["16_0", "15_1", "12_4", "8_8", "0_16"]:
+        g = geomean([summary[c][mix] for c in summary])
+        csv_line(f"fig45_speedup[{mix}]", 0.0, f"{g:.4f}")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

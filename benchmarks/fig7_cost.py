@@ -1,0 +1,47 @@
+"""Fig. 7 analogue: minimum COST found by each algorithm, normalized to the
+best cost found by any algorithm, per benchmark cell (geomean summary).
+
+The search runs on a noisy cost model (sigma=0.25 — the paper's learned cost
+model has substantial error vs. real exec time, §3); the reported metric is
+the cost-model value of the chosen schedule, exactly like the paper's Fig. 7.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import (ALGOS_FIG7, SUITE, best_of_seeds, csv_line,
+                               emit, geomean)
+
+NOISE = 0.25
+
+
+def main(cells=None, seeds=(0, 1, 2)) -> dict:
+    cells = cells or SUITE
+    rows = []
+    per_algo = {a: [] for a in ALGOS_FIG7}
+    for arch, shape in cells:
+        t0 = time.time()
+        costs = {}
+        for algo in ALGOS_FIG7:
+            (res, mdp) = best_of_seeds(arch, shape, algo, seeds=seeds,
+                                       noise_sigma=NOISE)
+            costs[algo] = res.cost
+        best = min(costs.values())
+        for algo, c in costs.items():
+            norm = c / best
+            per_algo[algo].append(norm)
+            rows.append({"cell": f"{arch}×{shape}", "algo": algo,
+                         "cost_s": c, "normalized": norm})
+        print(f"[fig7] {arch}×{shape}: " + " ".join(
+            f"{a}={costs[a]/best:.3f}" for a in ALGOS_FIG7) +
+            f" ({time.time()-t0:.0f}s)", flush=True)
+    summary = {a: geomean(v) for a, v in per_algo.items()}
+    emit(rows + [{"cell": "GEOMEAN", "algo": a, "normalized": g}
+                 for a, g in summary.items()], "fig7_cost")
+    for a, g in summary.items():
+        csv_line(f"fig7_cost_geomean[{a}]", 0.0, f"{g:.4f}")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

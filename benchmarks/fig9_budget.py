@@ -1,0 +1,76 @@
+"""Fig. 9 analogue: autotuning under a fixed WALL-CLOCK budget per cell
+(paper: 15 min; ours: scaled to 20 s of 1-core Python per cell).  Each
+algorithm reruns with fresh seeds until the budget is exhausted; the best
+schedule found within budget is scored (noise-free exec time).
+mcts_0.5s / mcts_1s use per-decision second budgets, as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import SUITE, csv_line, emit, geomean, run_algo, true_cost
+from repro.core.autotuner import make_mdp
+from repro.core.ensemble import ProTuner
+from repro.core.mcts import MCTSConfig
+
+NOISE = 0.25
+BUDGET_S = 20.0
+
+
+def _budget_mcts(arch, shape, per_decision_s, budget_s, seed0=0):
+    t0, seed = time.time(), seed0
+    best_plan, best_cost = None, float("inf")
+    while time.time() - t0 < budget_s:
+        mdp = make_mdp(arch, shape, noise_sigma=NOISE, noise_seed=0)
+        cfg = MCTSConfig(seconds_per_decision=per_decision_s, seed=seed)
+        tuner = ProTuner(mdp, n_standard=15, n_greedy=1, mcts_config=cfg, seed=seed)
+        res = tuner.run(time_budget_s=max(budget_s - (time.time() - t0), 0.5))
+        if res.cost < best_cost:
+            best_cost, best_plan = res.cost, res.plan
+        seed += 1
+    return best_plan
+
+
+def _budget_beam(arch, shape, budget_s, seed0=0):
+    from repro.core.beam import beam_search
+
+    t0, seed = time.time(), seed0
+    best_plan, best_cost = None, float("inf")
+    while time.time() - t0 < budget_s:
+        mdp = make_mdp(arch, shape, noise_sigma=NOISE, noise_seed=0)
+        res = beam_search(mdp, beam_size=32, passes=5, seed=seed,
+                          time_budget_s=max(budget_s - (time.time() - t0), 0.5))
+        if res.cost < best_cost:
+            best_cost, best_plan = res.cost, res.plan
+        seed += 1
+    return best_plan
+
+
+def main(cells=None, budget_s: float = BUDGET_S) -> dict:
+    cells = cells or SUITE[:8]
+    algos = {
+        "beam": lambda a, s: _budget_beam(a, s, budget_s),
+        "mcts_1s": lambda a, s: _budget_mcts(a, s, 0.08, budget_s),
+        "mcts_0.5s": lambda a, s: _budget_mcts(a, s, 0.04, budget_s),
+    }
+    rows, per_algo = [], {a: [] for a in algos}
+    for arch, shape in cells:
+        res = {name: true_cost(arch, shape, fn(arch, shape))
+               for name, fn in algos.items()}
+        best = min(res.values())
+        for name, c in res.items():
+            per_algo[name].append(c / best)
+            rows.append({"cell": f"{arch}×{shape}", "algo": name,
+                         "exec_s": c, "normalized": c / best})
+        print(f"[fig9] {arch}×{shape}: " + " ".join(
+            f"{n}={c/best:.3f}" for n, c in res.items()), flush=True)
+    summary = {a: geomean(v) for a, v in per_algo.items()}
+    emit(rows, "fig9_budget")
+    for a, g in summary.items():
+        csv_line(f"fig9_budget_geomean[{a}]", budget_s * 1e6, f"{g:.4f}")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

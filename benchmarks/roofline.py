@@ -1,0 +1,65 @@
+"""§Roofline report: per (arch × shape × mesh) — the three terms from the
+compiled dry-run, dominant bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, MFU.
+
+Reads experiments/dryrun/baseline.json (produced by scripts/sweep_dryrun.py);
+cells missing from the cache are compiled on demand (subprocess)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import csv_line, emit
+
+BASELINE = os.path.join("experiments", "dryrun", "baseline.json")
+
+
+def load_baseline() -> dict:
+    if os.path.exists(BASELINE):
+        with open(BASELINE) as f:
+            return json.load(f)["results"]
+    # fall back: compile everything now (slow path)
+    from repro.configs import cells
+    from repro.core.measure import measure_cell
+
+    out = {}
+    for cfg, shape in cells():
+        for mesh in ("single", "multi"):
+            key = f"{cfg.name}|{shape.name}|{mesh}"
+            out[key] = measure_cell(cfg.name, shape.name, mesh)
+    return out
+
+
+def main(mesh: str = "single") -> list:
+    res = load_baseline()
+    rows = []
+    print(f"[roofline] {'cell':44s} {'compute':>9s} {'memory':>9s} "
+          f"{'coll':>9s} {'step':>9s} dom        MFU   useful")
+    for key in sorted(res):
+        arch, shape, m = key.split("|")
+        if m != mesh:
+            continue
+        r = res[key]
+        rows.append({
+            "cell": f"{arch}×{shape}", "mesh": m,
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "step_s": r["step_s"],
+            "dominant": r["dominant"], "mfu": r["mfu"],
+            "useful_flops_ratio": r["useful_flops_ratio"],
+            "bytes_per_device": r["bytes_per_device"],
+            "fits_hbm": r["fits_hbm"],
+        })
+        print(f"[roofline] {arch+'×'+shape:44s} "
+              f"{r['compute_s']*1e3:8.1f}ms {r['memory_s']*1e3:8.1f}ms "
+              f"{r['collective_s']*1e3:8.1f}ms {r['step_s']*1e3:8.1f}ms "
+              f"{r['dominant']:10s} {r['mfu']:.3f} "
+              f"{r['useful_flops_ratio']:.2f}")
+    emit(rows, f"roofline_{mesh}")
+    for r in rows:
+        csv_line(f"roofline[{r['cell']}|{mesh}]", r["step_s"] * 1e6,
+                 f"dom={r['dominant']};mfu={r['mfu']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main("single")
+    main("multi")

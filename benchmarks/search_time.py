@@ -1,0 +1,56 @@
+"""§5.3 analogue: search-time breakdown.
+
+The paper found 88%% of MCTS time in child generation (simulation) and 7.5%%
+in cost evaluation; our MCTS logs both timers.  Also reports cost-model
+evaluations per schedule decision for beam vs greedy vs MCTS (beam's
+exhaustive child evaluation is its documented overhead) and wall time per
+algorithm on a representative cell."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import csv_line, emit, run_algo, scaled_cfg
+from repro.core.autotuner import make_mdp
+from repro.core.ensemble import ProTuner
+
+CELL = ("phi3.5-moe-42b-a6.6b", "train_4k")
+
+
+def main() -> dict:
+    arch, shape = CELL
+    out = {}
+    # --- MCTS internal breakdown ---
+    mdp = make_mdp(arch, shape)
+    cfg = dataclasses.replace(scaled_cfg("mcts_30s"), seed=0)
+    tuner = ProTuner(mdp, n_standard=15, n_greedy=1, mcts_config=cfg, seed=0)
+    t0 = time.perf_counter()
+    res = tuner.run()
+    wall = time.perf_counter() - t0
+    sim = sum(t.sim_time for t in tuner.trees)
+    ev = sum(t.eval_time for t in tuner.trees)
+    out["mcts_wall_s"] = wall
+    out["mcts_sim_frac"] = sim / max(sim + ev, 1e-9)
+    out["mcts_eval_frac"] = ev / max(sim + ev, 1e-9)
+    out["mcts_evals"] = res.n_evals
+
+    # --- evals per algorithm under equal decisions ---
+    for algo in ("greedy", "beam", "mcts_10s"):
+        t0 = time.perf_counter()
+        r, m = run_algo(arch, shape, algo, seed=0)
+        out[f"{algo}_evals"] = r.n_evals
+        out[f"{algo}_wall_s"] = time.perf_counter() - t0
+        out[f"{algo}_cost"] = r.cost
+
+    emit([out], "search_time")
+    csv_line("search_time_mcts_sim_frac", out["mcts_wall_s"] * 1e6,
+             f"{out['mcts_sim_frac']:.3f}")
+    csv_line("search_time_mcts_eval_frac", 0.0, f"{out['mcts_eval_frac']:.3f}")
+    for algo in ("greedy", "beam", "mcts_10s"):
+        csv_line(f"search_time[{algo}]", out[f"{algo}_wall_s"] * 1e6,
+                 f"evals={out[f'{algo}_evals']}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

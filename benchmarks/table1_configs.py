@@ -1,0 +1,46 @@
+"""Table 1 analogue: the MCTS configuration sweep (UCB variants, budgets,
+0/1-reward ablation) on the 16-cell suite — geomean normalized cost + the
+paper's §4.1 claims (binary rewards ≈9%% worse; best-cost root choice)."""
+from __future__ import annotations
+
+from benchmarks.common import SUITE, best_of_seeds, csv_line, emit, geomean
+
+NOISE = 0.25
+VARIANTS = [
+    "mcts_30s",
+    "mcts_10s",
+    "mcts_1s",
+    "mcts_Cp10_30s",
+    "mcts_sqrt2_30s",
+    "mcts_binary_30s",  # §4.1: 0/1 rewards (paper: 9% worse)
+]
+
+
+def main(cells=None, seeds=(0, 1)) -> dict:
+    cells = cells or SUITE
+    per_variant = {v: [] for v in VARIANTS}
+    rows = []
+    for arch, shape in cells:
+        costs = {}
+        for v in VARIANTS:
+            res, _ = best_of_seeds(arch, shape, v, seeds=seeds, noise_sigma=NOISE)
+            costs[v] = res.cost
+        best = min(costs.values())
+        for v, c in costs.items():
+            per_variant[v].append(c / best)
+            rows.append({"cell": f"{arch}×{shape}", "variant": v,
+                         "cost_s": c, "normalized": c / best})
+        print(f"[table1] {arch}×{shape}: " + " ".join(
+            f"{v}={costs[v]/best:.3f}" for v in VARIANTS), flush=True)
+    summary = {v: geomean(xs) for v, xs in per_variant.items()}
+    emit(rows, "table1_configs")
+    for v, g in summary.items():
+        csv_line(f"table1_geomean[{v}]", 0.0, f"{g:.4f}")
+    if summary["mcts_binary_30s"] > summary["mcts_30s"]:
+        delta = (summary["mcts_binary_30s"] / summary["mcts_30s"] - 1) * 100
+        csv_line("table1_binary_reward_penalty_pct", 0.0, f"{delta:.1f}")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

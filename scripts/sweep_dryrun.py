@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Run the baseline dry-run for every (arch × shape) cell on both meshes.
+
+Each cell compiles in its own subprocess (repro.launch.dryrun sets the
+512-device XLA flag); results land in experiments/measure_cache/ (keyed by
+cell + plan) and an index is written to experiments/dryrun/baseline.json.
+"""
+import argparse
+import json
+import os
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor, as_completed
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import cells  # noqa: E402
+from repro.core.measure import measure_cell  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--workers", type=int, default=3)
+    ap.add_argument("--out", default="experiments/dryrun/baseline.json")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    todo = [
+        (cfg.name, shape.name, mesh)
+        for mesh in meshes
+        for cfg, shape in cells()
+    ]
+    print(f"[sweep] {len(todo)} cells, {args.workers} workers")
+    results, failures = {}, {}
+    t0 = time.time()
+
+    def run(cell):
+        arch, shape, mesh = cell
+        return cell, measure_cell(arch, shape, mesh, plan=None, timeout=3000)
+
+    with ThreadPoolExecutor(max_workers=args.workers) as ex:
+        futs = {ex.submit(run, c): c for c in todo}
+        for fut in as_completed(futs):
+            cell = futs[fut]
+            key = "|".join(cell)
+            try:
+                _, rec = fut.result()
+                results[key] = rec
+                print(
+                    f"[sweep] ok  {key:55s} step={rec['step_s']*1e3:9.1f}ms "
+                    f"dom={rec['dominant']:10s} mfu={rec['mfu']:.3f} "
+                    f"compile={rec['compile_s']:.0f}s ({len(results)}/{len(todo)})",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001
+                failures[key] = repr(e)[:500]
+                print(f"[sweep] FAIL {key}: {repr(e)[:200]}", flush=True)
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"results": results, "failures": failures}, f, indent=1)
+    print(f"[sweep] done in {time.time()-t0:.0f}s: "
+          f"{len(results)} ok, {len(failures)} failed -> {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

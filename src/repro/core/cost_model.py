@@ -1,0 +1,454 @@
+"""Analytic roofline cost model for complete TPU schedules.
+
+Plays the role of the paper's learned cost model: fast (≈100 µs/plan),
+structurally informed, and — by construction — imperfect relative to the
+compile-based "real measurement" (core/measure.py derives the same three
+roofline terms from the actual XLA HLO).  The search compares plans by the
+estimated step time; infeasible plans (HBM over capacity) get a large but
+finite multiplicative penalty so the search sees a continuous landscape,
+mirroring Halide schedules that compile but run slowly.
+
+All byte/FLOP accounting is per *training/serving step* on the whole mesh;
+terms are per the assignment's formulas:
+
+    compute_s    = FLOPs   / (chips × 197 TF/s)
+    memory_s     = HBM B   / (chips × 819 GB/s)
+    collective_s = wire B/chip / 50 GB/s
+    step_s       = max(compute, memory) + (1 - overlap)·collective
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core.space import MeshSpec, SchedulePlan, ScheduleSpace
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12  # bf16 per chip
+    hbm_bw: float = 819e9  # B/s per chip
+    link_bw: float = 50e9  # B/s per ICI link
+    hbm_bytes: float = 16 * 2**30
+    vmem_bytes: float = 128 * 2**20
+    pod_link_bw: float = 25e9  # inter-pod (DCN/optical) per chip-pair
+
+
+HW = HardwareSpec()
+
+BF16 = 2
+F32 = 4
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    step_s: float
+    flops: float  # whole-step HLO-equivalent FLOPs (all chips)
+    hbm_bytes: float  # whole-step HBM traffic (all chips)
+    coll_bytes_per_chip: float
+    hbm_per_chip: float  # resident bytes per chip
+    feasible: bool
+    model_flops: float  # 6·N_active·D
+    details: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def mfu(self) -> float:
+        """MODEL_FLOPS / (step_s × chips × peak) — filled by caller context."""
+        return self.details.get("mfu", 0.0)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        return d
+
+
+class AnalyticCostModel:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        shape: InputShape,
+        mesh: MeshSpec,
+        hw: HardwareSpec = HW,
+    ):
+        self.cfg = cfg
+        self.shape = shape
+        self.mesh = mesh
+        self.hw = hw
+        self.n_evals = 0
+
+    # ------------------------------------------------------------------
+    def _sizes(self, plan: SchedulePlan):
+        mesh = self.mesh
+        dp = mesh.axis("data")
+        if plan.batch_axes == "pod_data" and mesh.multi_pod:
+            dp *= mesh.axis("pod")
+        tp_on = plan.param_strategy in ("tp", "fsdp_tp", "tp2d")
+        tp = mesh.axis("model") if tp_on else 1
+        fsdp = dp if plan.param_strategy in ("fsdp", "fsdp_tp", "tp2d") else 1
+        return dp, tp, fsdp, tp_on
+
+    # ------------------------------------------------------------------
+    # Structural FLOP / byte accounting
+    # ------------------------------------------------------------------
+    def _layer_flops_fwd(self, tokens: int, kv_len: int) -> Dict[str, float]:
+        """Forward FLOPs per *period*, for `tokens` processed tokens."""
+        cfg = self.cfg
+        out: Dict[str, float] = {"attn_proj": 0, "attn_sdpa": 0, "mamba": 0, "mlp": 0, "moe": 0}
+        hd = cfg.resolved_head_dim
+        for spec in cfg.layer_plan():
+            d = cfg.d_model
+            if spec.mixer == "attn":
+                qo = 2 * tokens * d * cfg.n_heads * hd * 2
+                kv = 2 * tokens * d * cfg.n_kv_heads * hd * 2
+                out["attn_proj"] += qo + kv
+                if self.shape.kind == "decode":
+                    sdpa = 2 * 2 * tokens * cfg.n_heads * hd * kv_len
+                else:
+                    sdpa = 2 * 2 * tokens * cfg.n_heads * hd * (kv_len / 2)
+                out["attn_sdpa"] += sdpa
+            else:
+                Di, N = cfg.d_inner, cfg.ssm_state
+                dtr = cfg.resolved_dt_rank
+                m = 2 * tokens * d * 2 * Di  # in_proj
+                m += 2 * tokens * cfg.conv_width * Di
+                m += 2 * tokens * Di * (dtr + 2 * N)
+                m += 2 * tokens * dtr * Di
+                m += 8 * tokens * Di * N  # scan: exp, mul-add state, reduce
+                m += 2 * tokens * Di * d  # out_proj
+                out["mamba"] += m
+            if spec.mlp == "dense":
+                mats = 3 if cfg.act == "swiglu" else 2
+                out["mlp"] += 2 * tokens * d * cfg.d_ff * mats
+            elif spec.mlp == "moe":
+                mats = 3 if cfg.act == "swiglu" else 2
+                routed = tokens * cfg.experts_per_token * 1.25  # capacity factor
+                out["moe"] += 2 * routed * d * cfg.d_ff * mats
+                out["moe"] += 2 * tokens * d * cfg.n_experts  # router
+        return out
+
+    def _fwd_flops(self) -> Tuple[float, Dict[str, float]]:
+        cfg, shape = self.cfg, self.shape
+        tokens = shape.tokens  # decode: batch; train/prefill: B*S
+        kv_len = shape.seq_len
+        per_period = self._layer_flops_fwd(tokens, kv_len)
+        total = sum(per_period.values()) * cfg.n_periods
+        head = 2 * tokens * cfg.d_model * cfg.vocab_size
+        total += head
+        per_period["head"] = head
+        return total, per_period
+
+    # ------------------------------------------------------------------
+    def _param_bytes(self) -> float:
+        return self.cfg.param_count() * BF16
+
+    def _param_groups(self) -> Dict[str, int]:
+        """Parameter counts by shardability family."""
+        cfg = self.cfg
+        groups = {"mixer": 0, "ffn": 0, "moe": 0, "vocab": 0, "other": 0}
+        for spec in cfg.layer_plan():
+            groups["mixer"] += cfg._mixer_params(spec)
+            total, _ = cfg._mlp_params(spec)
+            if spec.mlp == "moe":
+                groups["moe"] += total
+            else:
+                groups["ffn"] += total
+            groups["other"] += 2 * cfg.d_model
+        for k in ("mixer", "ffn", "moe", "other"):
+            groups[k] *= cfg.n_periods
+        emb = cfg.vocab_size * cfg.d_model
+        groups["vocab"] = emb if cfg.tie_embeddings else 2 * emb
+        return groups
+
+    def _sharded_param_bytes(self, plan: SchedulePlan, tp: int) -> float:
+        """Per-model-axis-sharded parameter bytes (before the FSDP split):
+        the quantity ZeRO-3 must all-gather and the TP axis must hold."""
+        cfg = self.cfg
+        g = self._param_groups()
+        tot = 0.0
+        tot += g["mixer"] / (tp if plan.mixer_tp and tp > 1 else 1)
+        tot += g["ffn"] / (tp if plan.ffn_tp and tp > 1 else 1)
+        if g["moe"]:
+            if plan.moe_mode == "ep" and tp > 1:
+                tot += g["moe"] / min(tp, cfg.n_experts)
+            elif plan.moe_mode == "tp" and tp > 1:
+                tot += g["moe"] / tp
+            else:
+                tot += g["moe"]
+        vshard = (
+            tp if plan.vocab_shard and tp > 1 and cfg.vocab_size % tp == 0 else 1
+        )
+        tot += g["vocab"] / vshard
+        tot += g["other"]
+        return tot * BF16
+
+    def _state_bytes_per_param(self, plan: SchedulePlan) -> float:
+        """Resident bytes/param incl. the bf16 param itself, the Adam
+        moments, and the f32 grad accumulator (matches training/optimizer.py:
+        params are single-copy bf16, moments fp32 or rowwise-int8+scale)."""
+        if plan.opt_dtype == "int8":
+            return BF16 + 2 * 1.1 + 4
+        return BF16 + 2 * 4 + 4
+
+    def _activation_bytes_resident(self, plan: SchedulePlan, dp: int, tp: int) -> float:
+        """Stored activations per chip between fwd and bwd (train only)."""
+        cfg, shape = self.cfg, self.shape
+        if shape.kind != "train":
+            return 0.0
+        tokens_local = shape.tokens / dp / max(plan.microbatches, 1)
+        d = cfg.d_model
+        plan_layers = cfg.layer_plan()
+        per_layer = {
+            "none": 0.0,
+            "dots": 0.0,
+            "full": 0.0,
+        }
+        # bytes stored per token per layer, by remat policy
+        ffn_mult = 0.0
+        mixer_mult = 0.0
+        for spec in plan_layers:
+            if spec.mlp == "dense":
+                ffn_mult += 2 * cfg.d_ff / tp
+            elif spec.mlp == "moe":
+                ffn_mult += 2 * cfg.experts_per_token * 1.25 * cfg.d_ff / tp
+            if spec.mixer == "attn":
+                mixer_mult += (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.resolved_head_dim / tp
+            else:
+                mixer_mult += 3 * cfg.d_inner / tp
+        n_per = cfg.n_periods
+        if plan.remat == "full":
+            stored = tokens_local * d * n_per  # period-boundary inputs only
+        elif plan.remat == "dots":
+            stored = tokens_local * (d * 4 + mixer_mult * 0.5 + ffn_mult * 0.5) * n_per
+        else:
+            stored = tokens_local * (d * 6 + mixer_mult + ffn_mult) * n_per
+        logits = 0.0
+        if plan.remat == "none":
+            logits = tokens_local * cfg.vocab_size / (tp if plan.vocab_shard else 1)
+        return stored * BF16 + logits * BF16
+
+    def _kv_cache_bytes_per_chip(self, plan: SchedulePlan, dp: int, tp: int) -> float:
+        cfg, shape = self.cfg, self.shape
+        if shape.kind != "decode":
+            return 0.0
+        total = 0.0
+        kv_bytes = 1.06 if plan.kv_dtype == "int8" else BF16  # int8 + scales
+        for spec in cfg.layer_plan():
+            if spec.mixer == "attn":
+                total += (
+                    2 * shape.global_batch * cfg.n_kv_heads
+                    * shape.seq_len * cfg.resolved_head_dim * kv_bytes
+                )
+            else:
+                total += shape.global_batch * cfg.d_inner * (
+                    cfg.ssm_state * F32 + (cfg.conv_width - 1) * BF16
+                )
+        total *= cfg.n_periods
+        dp_used = min(dp, max(shape.global_batch, 1))
+        shard = dp_used
+        if plan.seq_shard:
+            # the sequence dim absorbs whatever the batch dim can't use
+            shard *= (dp // dp_used) * (tp if not plan.mixer_tp else 1)
+        if plan.mixer_tp and plan.param_strategy in ("tp", "fsdp_tp", "tp2d"):
+            shard *= min(tp, max(cfg.n_kv_heads, 1))
+        return total / shard
+
+    # ------------------------------------------------------------------
+    # Collectives
+    # ------------------------------------------------------------------
+    def _collective_bytes_per_chip(
+        self, plan: SchedulePlan, dp: int, tp: int, fsdp: int
+    ) -> Tuple[float, Dict[str, float]]:
+        cfg, shape = self.cfg, self.shape
+        train = shape.kind == "train"
+        p_bytes = self._param_bytes()
+        out: Dict[str, float] = {}
+        total = 0.0
+        n_mb = max(plan.microbatches, 1)
+        tokens_local = shape.tokens / min(dp, max(shape.global_batch, 1))
+
+        # --- parameter-axis collectives ---
+        p_tp_bytes = self._sharded_param_bytes(plan, tp)
+        if train:
+            if fsdp > 1:
+                # ZeRO-3: AG params in fwd + AG in bwd + RS grads, per microbatch
+                shard_bytes = p_tp_bytes / fsdp
+                ag = shard_bytes * (fsdp - 1)
+                grad_scale = {"fp32": 2.0, "rs_ag": 1.0, "int8": 0.5}[plan.grad_comm]
+                rs = shard_bytes * (fsdp - 1) * grad_scale
+                out["zero3"] = (2 * ag + rs) * n_mb
+            else:
+                # pure DP gradient all-reduce over dp
+                wire = 2 * p_tp_bytes * (dp - 1) / dp
+                wire *= {"fp32": 2.0, "rs_ag": 1.0, "int8": 0.25}[plan.grad_comm]
+                out["grad_allreduce"] = wire
+        elif plan.param_strategy == "tp2d" and fsdp > 1:
+            # inference weight gather-on-use over the data axis
+            out["weight_gather"] = p_tp_bytes / fsdp * (fsdp - 1)
+        # --- TP activation collectives (per layer pair of matmuls) ---
+        if tp > 1:
+            act = tokens_local * cfg.d_model * BF16
+            n_ar = 0
+            for spec in cfg.layer_plan():
+                if spec.mixer == "attn" and plan.mixer_tp:
+                    n_ar += 1
+                if spec.mixer == "mamba" and plan.mixer_tp:
+                    n_ar += 1
+                if spec.mlp == "dense" and plan.ffn_tp:
+                    n_ar += 1
+                if spec.mlp == "moe" and plan.moe_mode == "tp":
+                    n_ar += 1
+            n_ar *= cfg.n_periods
+            wire_one = 2 * act * (tp - 1) / tp  # ring AR
+            if plan.seq_shard:
+                wire_one *= 0.5  # RS+AG replaces AR: half the wire bytes
+            coll = n_ar * wire_one
+            if train:
+                coll *= 3  # fwd + both bwd directions
+            out["tp_act"] = coll
+            if plan.vocab_shard:
+                lg = tokens_local * cfg.d_model * BF16
+                out["vocab"] = 2 * lg * (tp - 1) / tp * (3 if train else 1)
+        # --- MoE all-to-all ---
+        if cfg.is_moe and plan.moe_mode == "ep" and tp > 1:
+            ep = min(tp, cfg.n_experts)
+            a2a = tokens_local * cfg.experts_per_token * 1.25 * cfg.d_model * BF16
+            wire = 2 * a2a * (ep - 1) / ep  # dispatch + combine
+            out["moe_a2a"] = wire * (3 if train else 1)
+        total = sum(out.values())
+        return total, out
+
+    # ------------------------------------------------------------------
+    def terms(self, plan: SchedulePlan) -> RooflineTerms:
+        self.n_evals += 1
+        cfg, shape, hw = self.cfg, self.shape, self.hw
+        chips = self.mesh.size
+        dp, tp, fsdp, tp_on = self._sizes(plan)
+        train = shape.kind == "train"
+        n_mb = max(plan.microbatches, 1)
+
+        # ---- compute ----
+        fwd, _parts = self._fwd_flops()
+        if train:
+            remat_mult = {"none": 3.0, "dots": 3.35, "full": 4.0}[plan.remat]
+            flops = fwd * remat_mult + 10.0 * cfg.param_count()
+        else:
+            flops = fwd
+        # kernel-tile efficiency: MXU alignment + grid overhead
+        bq, bkv = plan.attn_block
+        eff = (bq / (bq + 64.0)) * (bkv / (bkv + 64.0)) / (512.0 / 576.0) ** 2
+        eff = min(eff, 1.0)
+        if cfg.n_heads:
+            from repro.kernels.flash_attention import vmem_bytes
+
+            if 2 * vmem_bytes(bq, bkv, cfg.resolved_head_dim) > hw.vmem_bytes * 0.75:
+                eff *= 0.5
+        mb_eff = 1.0 - 0.015 * math.log2(n_mb) if n_mb > 1 else 1.0
+        overlap_tax = 1.05 if plan.overlap >= 0.9 else 1.0
+        compute_s = flops / (chips * hw.peak_flops) / (eff * mb_eff) * overlap_tax
+        if cfg.is_ssm:
+            # sequential scan: chunk too small -> grid overhead, too large -> VMEM
+            chunk = plan.scan_chunk
+            grid_steps = (shape.tokens / max(dp, 1)) / chunk * (cfg.d_inner / 256.0)
+            compute_s += grid_steps * 0.3e-6 / max(chips / dp, 1)
+
+        # ---- memory (HBM traffic, accounted per chip) ----
+        p_bytes = self._param_bytes()
+        p_tp_mem = self._sharded_param_bytes(plan, tp)
+        # each chip streams its (TP-sharded, ZeRO-gathered) weights per
+        # microbatch pass; fwd + bwd for training
+        weight_reads = p_tp_mem * n_mb * (2 if train else 1)
+        opt_traffic = 0.0
+        if train:
+            sbytes = self._state_bytes_per_param(plan)
+            params_per_chip = p_tp_mem / BF16 / fsdp
+            opt_traffic = params_per_chip * (2 * sbytes + 4)  # rw states + grad
+        act_traffic = (
+            shape.tokens / min(dp, max(shape.global_batch, 1))
+            * cfg.d_model * BF16 * cfg.n_layers
+            * (6 if train else 3)
+        )
+        if train and plan.remat != "none":
+            act_traffic *= 1.35  # recompute re-streams activations
+        kv_traffic = self._kv_cache_bytes_per_chip(plan, dp, tp)
+        per_chip_traffic = weight_reads + opt_traffic + act_traffic + kv_traffic
+        hbm_bytes = per_chip_traffic * chips
+        memory_s = per_chip_traffic / hw.hbm_bw
+
+        # ---- collectives ----
+        coll_per_chip, coll_parts = self._collective_bytes_per_chip(plan, dp, tp, fsdp)
+        link = hw.link_bw
+        if self.mesh.multi_pod and plan.batch_axes == "pod_data":
+            # DP collectives cross the pod boundary at lower bandwidth
+            pod_frac = coll_parts.get("grad_allreduce", 0) + coll_parts.get("zero3", 0)
+            link_eff = (
+                (coll_per_chip - pod_frac) / max(coll_per_chip, 1e-9) * hw.link_bw
+                + pod_frac / max(coll_per_chip, 1e-9) * hw.pod_link_bw
+            )
+            link = max(link_eff, hw.pod_link_bw)
+        collective_s = coll_per_chip / link
+
+        # ---- capacity ----
+        p_tp = self._sharded_param_bytes(plan, tp)
+        params_per_chip = p_tp / BF16 / fsdp
+        resident = params_per_chip * (
+            self._state_bytes_per_param(plan) if train else BF16
+        )
+        per_chip = (
+            resident
+            + self._activation_bytes_resident(plan, dp, tp)
+            + self._kv_cache_bytes_per_chip(plan, dp, tp)
+        )
+        feasible = per_chip <= hw.hbm_bytes * 0.92  # fragmentation headroom
+
+        step_s = max(compute_s, memory_s) + (1.0 - plan.overlap) * collective_s
+        if not feasible:
+            step_s *= 100.0 * (1.0 + per_chip / hw.hbm_bytes)
+
+        n_active = cfg.active_param_count()
+        model_flops = 6.0 * n_active * shape.tokens if train else 2.0 * n_active * shape.tokens
+        details = dict(coll_parts)
+        details["eff"] = eff
+        details["mfu"] = model_flops / (step_s * chips * hw.peak_flops)
+        return RooflineTerms(
+            compute_s=compute_s,
+            memory_s=memory_s,
+            collective_s=collective_s,
+            step_s=step_s,
+            flops=flops,
+            hbm_bytes=hbm_bytes,
+            coll_bytes_per_chip=coll_per_chip,
+            hbm_per_chip=per_chip,
+            feasible=feasible,
+            model_flops=model_flops,
+            details=details,
+        )
+
+    # ------------------------------------------------------------------
+    def cost(self, plan: SchedulePlan) -> float:
+        """Scalar cost (estimated step seconds, with infeasibility penalty)."""
+        return self.terms(plan).step_s
+
+    def partial_cost(self, actions, space: ScheduleSpace) -> float:
+        """The (unreliable) cost of an INCOMPLETE schedule: complete the
+        remaining stages with defaults and evaluate — this is exactly what
+        beam search must do at every depth, and what the paper shows is
+        misleading (Fig. 1/2)."""
+        defaults = space.default_actions()
+        full = list(actions) + defaults[len(actions):]
+        return self.cost(space.plan_from_actions(full))

@@ -1,0 +1,149 @@
+"""ProTuner ensemble: N standard + M greedy MCTSes with synchronized roots
+(paper §4.1/§4.2, pseudocode Fig. 6).
+
+Every decision round each tree spends its budget from the shared current
+root; the winning next root is the tree whose subtree found the best
+complete schedule — by cost model, or by **real measurement** of each
+tree's best candidate when ``measure_fn`` is given (``mcts_cost+real_*``).
+All trees then advance to the same child (keeping their subtrees).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.mcts import MCTS, MCTSConfig
+from repro.core.mdp import ScheduleMDP, State
+from repro.core.space import SchedulePlan
+
+INF = float("inf")
+
+
+@dataclass
+class TuneResult:
+    plan: SchedulePlan
+    cost: float  # cost-model cost of the final schedule
+    measured: Optional[float]  # real-measured step time (if measuring)
+    n_evals: int  # cost-model evaluations
+    n_measurements: int
+    wall_time_s: float
+    decisions: List[dict] = field(default_factory=list)
+    algo: str = ""
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d["plan"] = self.plan.to_dict()
+        return d
+
+
+class ProTuner:
+    def __init__(
+        self,
+        mdp: ScheduleMDP,
+        *,
+        n_standard: int = 15,
+        n_greedy: int = 1,
+        mcts_config: MCTSConfig = MCTSConfig(),
+        measure_fn: Optional[Callable[[SchedulePlan], float]] = None,
+        parallel: bool = False,
+        seed: int = 0,
+    ):
+        self.mdp = mdp
+        self.measure_fn = measure_fn
+        self.parallel = parallel
+        self.trees: List[MCTS] = []
+        self.greedy_flags: List[bool] = []
+        for i in range(n_standard):
+            cfg = dataclasses.replace(mcts_config, simulation="random", seed=seed * 1000 + i)
+            self.trees.append(MCTS(mdp, cfg))
+            self.greedy_flags.append(False)
+        for i in range(n_greedy):
+            cfg = dataclasses.replace(
+                mcts_config, simulation="greedy", seed=seed * 1000 + 500 + i
+            )
+            self.trees.append(MCTS(mdp, cfg))
+            self.greedy_flags.append(True)
+        self._measure_cache: Dict[State, float] = {}
+        self.n_measurements = 0
+
+    # ------------------------------------------------------------------
+    def _measure_state(self, state: State) -> float:
+        if state in self._measure_cache:
+            return self._measure_cache[state]
+        t = self.measure_fn(self.mdp.plan(state))
+        self._measure_cache[state] = t
+        self.n_measurements += 1
+        return t
+
+    def run(self, time_budget_s: Optional[float] = None) -> TuneResult:
+        t0 = time.perf_counter()
+        decisions: List[dict] = []
+        while not self.trees[0].done:
+            if time_budget_s and time.perf_counter() - t0 > time_budget_s:
+                break
+            if self.parallel:
+                with ThreadPoolExecutor(max_workers=len(self.trees)) as ex:
+                    results = list(ex.map(lambda t: t.run_decision(), self.trees))
+            else:
+                results = [t.run_decision() for t in self.trees]
+
+            # winner: best complete schedule across trees; optionally re-rank
+            # the (deduped) candidates by real measurement (paper Fig. 6's
+            # commented line).
+            if self.measure_fn is not None:
+                ranked = sorted(
+                    range(len(results)), key=lambda i: results[i].best_cost
+                )
+                seen: Dict[State, int] = {}
+                for i in ranked:
+                    st = results[i].best_state
+                    if st is not None and st not in seen:
+                        seen[st] = i
+                best_i = min(
+                    seen.values(),
+                    key=lambda i: self._measure_state(results[i].best_state),
+                )
+            else:
+                best_i = min(
+                    range(len(results)), key=lambda i: results[i].best_cost
+                )
+            win = results[best_i]
+            decisions.append(
+                {
+                    "depth": len(self.trees[0].root_state),
+                    "stage": self.mdp.space.stages[len(self.trees[0].root_state)].name,
+                    "action": win.action,
+                    "winner_tree": best_i,
+                    "winner_greedy": self.greedy_flags[best_i],
+                    "best_cost": win.best_cost,
+                }
+            )
+            for t in self.trees:
+                t.advance_root(win.action)
+
+        # final schedule: the best complete state any tree ever saw
+        best_tree = min(self.trees, key=lambda t: t.global_best)
+        final_state = best_tree.global_best_state
+        final_cost = best_tree.global_best
+        measured = None
+        if self.measure_fn is not None and final_state is not None:
+            # winner by real time among all measured candidates + final
+            cands = dict(self._measure_cache)
+            cands[final_state] = self._measure_state(final_state)
+            final_state = min(cands, key=cands.get)
+            measured = cands[final_state]
+            final_cost = self.mdp.terminal_cost(final_state)
+        n_evals = getattr(self.mdp.cost_model, "n_evals", 0)
+        return TuneResult(
+            plan=self.mdp.plan(final_state),
+            cost=final_cost,
+            measured=measured,
+            n_evals=n_evals,
+            n_measurements=self.n_measurements,
+            wall_time_s=time.perf_counter() - t0,
+            decisions=decisions,
+            algo="mcts",
+        )

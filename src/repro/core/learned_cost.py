@@ -1,0 +1,141 @@
+"""Learned cost model (paper §3): a small MLP trained on random COMPLETE
+schedules, in pure JAX.
+
+Reproduces the paper's observation (Fig. 1/2): a model trained on complete
+schedules ranks complete schedules well but mis-ranks partial ones (their
+default-completion features are off-distribution), which is what poisons
+beam search at every depth.
+"""
+from __future__ import annotations
+
+import random as _random
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.space import SchedulePlan, ScheduleSpace
+
+
+def featurize(plan: SchedulePlan, space: ScheduleSpace) -> np.ndarray:
+    """One-hot per stage + numeric knobs (log-scaled)."""
+    feats: List[float] = []
+    for stage in space.stages:
+        val = getattr(plan, stage.name)
+        for opt in stage.options:
+            feats.append(1.0 if opt == val else 0.0)
+    feats.append(np.log2(plan.microbatches))
+    feats.append(np.log2(plan.attn_block[0]))
+    feats.append(np.log2(plan.attn_block[1]))
+    feats.append(np.log2(plan.scan_chunk))
+    feats.append(plan.overlap)
+    return np.asarray(feats, np.float32)
+
+
+@dataclass
+class LearnedCostModel:
+    params: dict
+    space: ScheduleSpace
+    mean: float
+    std: float
+    n_evals: int = 0
+
+    def cost(self, plan: SchedulePlan) -> float:
+        self.n_evals += 1
+        x = jnp.asarray(featurize(plan, self.space))
+        y = _mlp_apply(self.params, x[None])[0, 0]
+        return float(jnp.exp(y * self.std + self.mean))
+
+    def partial_cost(self, actions, space) -> float:
+        defaults = space.default_actions()
+        full = list(actions) + defaults[len(actions):]
+        return self.cost(space.plan_from_actions(full))
+
+
+def _mlp_init(key, d_in: int, hidden: int = 64) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = lambda k, a, b: jax.random.normal(k, (a, b)) * (2.0 / a) ** 0.5
+    return {
+        "w1": s(k1, d_in, hidden), "b1": jnp.zeros(hidden),
+        "w2": s(k2, hidden, hidden), "b2": jnp.zeros(hidden),
+        "w3": s(k3, hidden, 1), "b3": jnp.zeros(1),
+    }
+
+
+def _mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.relu(x @ p["w1"] + p["b1"])
+    h = jax.nn.relu(h @ p["w2"] + p["b2"])
+    return h @ p["w3"] + p["b3"]
+
+
+def train_learned_cost(
+    space: ScheduleSpace,
+    oracle: AnalyticCostModel,
+    *,
+    n_samples: int = 512,
+    steps: int = 400,
+    lr: float = 3e-3,
+    seed: int = 0,
+) -> LearnedCostModel:
+    """Train on random complete schedules against the oracle's cost
+    (the paper trains against measured runtimes of random programs)."""
+    rng = _random.Random(seed)
+    plans = [space.random_plan(rng) for _ in range(n_samples)]
+    X = np.stack([featurize(p, space) for p in plans])
+    y = np.asarray([oracle.cost(p) for p in plans], np.float32)
+    logy = np.log(np.maximum(y, 1e-9))
+    mean, std = float(logy.mean()), float(logy.std() + 1e-6)
+    Y = (logy - mean) / std
+
+    params = _mlp_init(jax.random.PRNGKey(seed), X.shape[1])
+    Xj, Yj = jnp.asarray(X), jnp.asarray(Y)[:, None]
+
+    @jax.jit
+    def step(params, _):
+        def loss_fn(p):
+            pred = _mlp_apply(p, Xj)
+            return jnp.mean((pred - Yj) ** 2)
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+        return params, loss
+
+    params, losses = jax.lax.scan(step, params, jnp.arange(steps))
+    return LearnedCostModel(params=params, space=space, mean=mean, std=std)
+
+
+def ranking_correlation(
+    model, oracle: AnalyticCostModel, space: ScheduleSpace, *,
+    n: int = 128, seed: int = 1, partial_depth: Optional[int] = None,
+) -> float:
+    """Spearman rank correlation model-vs-oracle on complete schedules, or on
+    partial prefixes (default-completed) when ``partial_depth`` is given."""
+    rng = _random.Random(seed)
+    preds, golds = [], []
+    for _ in range(n):
+        actions = space.random_actions(rng)
+        if partial_depth is not None:
+            prefix = actions[:partial_depth]
+            defaults = space.default_actions()
+            full_actions = prefix + defaults[len(prefix):]
+            # the model scores its (misleading) default completion; the
+            # oracle scores the TRUE eventual schedule (the random one)
+            preds.append(model.cost(space.plan_from_actions(full_actions)))
+            golds.append(oracle.cost(space.plan_from_actions(actions)))
+        else:
+            plan = space.plan_from_actions(actions)
+            preds.append(model.cost(plan))
+            golds.append(oracle.cost(plan))
+    return _spearman(np.asarray(preds), np.asarray(golds))
+
+
+def _spearman(a: np.ndarray, b: np.ndarray) -> float:
+    ra = np.argsort(np.argsort(a)).astype(np.float64)
+    rb = np.argsort(np.argsort(b)).astype(np.float64)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = np.sqrt((ra**2).sum() * (rb**2).sum())
+    return float((ra * rb).sum() / denom) if denom else 0.0

@@ -1,0 +1,45 @@
+"""The scheduling MDP (paper §3-4): deterministic transitions over decision
+prefixes; only terminal (complete) schedules have a meaningful cost."""
+from __future__ import annotations
+
+from typing import Callable, Sequence, Tuple
+
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.space import SchedulePlan, ScheduleSpace
+
+State = Tuple[int, ...]
+
+
+class ScheduleMDP:
+    def __init__(self, space: ScheduleSpace, cost_model):
+        self.space = space
+        self.cost_model = cost_model
+
+    @property
+    def initial_state(self) -> State:
+        return ()
+
+    def n_actions(self, state: State) -> int:
+        return self.space.n_actions(len(state))
+
+    def step(self, state: State, action: int) -> State:
+        assert 0 <= action < self.n_actions(state)
+        return state + (action,)
+
+    def is_terminal(self, state: State) -> bool:
+        return len(state) == self.space.n_stages
+
+    def plan(self, state: State) -> SchedulePlan:
+        assert self.is_terminal(state)
+        return self.space.plan_from_actions(state)
+
+    def terminal_cost(self, state: State) -> float:
+        """Cost of a COMPLETE schedule — the only reliable signal."""
+        return self.cost_model.cost(self.plan(state))
+
+    def partial_cost(self, state: State) -> float:
+        """Cost of an incomplete schedule via default-completion — the
+        unreliable intermediate signal beam/greedy search depends on."""
+        if self.is_terminal(state):
+            return self.terminal_cost(state)
+        return self.cost_model.partial_cost(state, self.space)

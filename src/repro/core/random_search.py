@@ -1,0 +1,49 @@
+"""Random search baseline (paper §5: no cost model; best *measured* schedule
+within the time budget — ours measures via the compile-based evaluator when
+given one, else falls back to the cost model)."""
+from __future__ import annotations
+
+import random
+import time
+from typing import Callable, Optional
+
+from repro.core.ensemble import TuneResult
+from repro.core.mdp import ScheduleMDP
+
+
+def random_search(
+    mdp: ScheduleMDP,
+    *,
+    n_samples: int = 256,
+    time_budget_s: Optional[float] = None,
+    measure_fn: Optional[Callable] = None,
+    seed: int = 0,
+) -> TuneResult:
+    t0 = time.perf_counter()
+    rng = random.Random(seed)
+    evaluate = measure_fn or mdp.cost_model.cost
+    best_cost = float("inf")
+    best_plan = None
+    n_meas = 0
+    i = 0
+    while True:
+        if time_budget_s is not None:
+            if time.perf_counter() - t0 > time_budget_s:
+                break
+        elif i >= n_samples:
+            break
+        plan = mdp.space.random_plan(rng)
+        c = evaluate(plan)
+        n_meas += 1
+        if c < best_cost:
+            best_cost, best_plan = c, plan
+        i += 1
+    return TuneResult(
+        plan=best_plan,
+        cost=mdp.cost_model.cost(best_plan),
+        measured=best_cost if measure_fn else None,
+        n_evals=getattr(mdp.cost_model, "n_evals", 0),
+        n_measurements=n_meas if measure_fn else 0,
+        wall_time_s=time.perf_counter() - t0,
+        algo="random",
+    )

@@ -1,0 +1,211 @@
+"""The TPU schedule space: ProTuner's MDP states/actions, re-targeted.
+
+The paper schedules a Halide pipeline stage-by-stage (tiling, vectorize,
+parallel, compute-at).  Here a *schedule* is the complete set of distribution
+and kernel decisions for one (architecture × input-shape × mesh) cell; the
+MDP assigns one decision **stage** at a time, in a fixed order, so a state is
+a prefix of decisions and a terminal state is a complete ``SchedulePlan`` —
+only terminal states are costed, exactly as in the paper.
+
+Stages that are inapplicable to a cell (``moe_mode`` on a dense arch,
+``microbatches`` on a decode shape) collapse to their single legal action, so
+every cell presents a well-formed MDP (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import random as _random
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """Abstract mesh: axis names + sizes (no jax device state needed)."""
+
+    names: Tuple[str, ...]
+    shape: Tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    def axis(self, name: str) -> int:
+        return self.shape[self.names.index(name)]
+
+    @property
+    def multi_pod(self) -> bool:
+        return "pod" in self.names
+
+
+SINGLE_POD = MeshSpec(("data", "model"), (16, 16))
+MULTI_POD = MeshSpec(("pod", "data", "model"), (2, 16, 16))
+
+
+@dataclass(frozen=True)
+class SchedulePlan:
+    """A complete schedule: one value per stage."""
+
+    batch_axes: str = "data"  # "data" | "pod_data"
+    param_strategy: str = "fsdp_tp"  # replicated | tp | fsdp | fsdp_tp
+    mixer_tp: bool = True  # shard attention heads / mamba d_inner over model
+    seq_shard: bool = False  # sequence-parallel activations / KV-cache seq
+    ffn_tp: bool = True
+    moe_mode: str = "dense"  # ep | tp | dense (dense = replicated experts)
+    vocab_shard: bool = True
+    remat: str = "dots"  # none | dots | full
+    microbatches: int = 1
+    attn_block: Tuple[int, int] = (256, 256)  # flash (block_q, block_kv)
+    scan_chunk: int = 128  # mamba time chunk
+    grad_comm: str = "fp32"  # fp32 | int8 | rs_ag
+    overlap: float = 0.5  # collective/compute overlap factor
+    opt_dtype: str = "float32"  # float32 | int8 Adam moments
+    kv_dtype: str = "bf16"  # bf16 | int8 KV cache (decode shapes)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "SchedulePlan":
+        d = dict(d)
+        if isinstance(d.get("attn_block"), list):
+            d["attn_block"] = tuple(d["attn_block"])
+        return SchedulePlan(**d)
+
+
+@dataclass(frozen=True)
+class Stage:
+    name: str
+    options: Tuple
+
+
+class ScheduleSpace:
+    """Per-cell stage list; builds plans from action sequences."""
+
+    def __init__(self, cfg: ModelConfig, shape: InputShape, mesh: MeshSpec):
+        self.cfg = cfg
+        self.shape = shape
+        self.mesh = mesh
+        self.stages: List[Stage] = self._build_stages()
+
+    # -- MDP geometry --------------------------------------------------------
+    def _build_stages(self) -> List[Stage]:
+        cfg, shape, mesh = self.cfg, self.shape, self.mesh
+        train = shape.kind == "train"
+        st: List[Stage] = []
+
+        st.append(
+            Stage(
+                "batch_axes",
+                ("data", "pod_data") if mesh.multi_pod else ("data",),
+            )
+        )
+        if train:
+            st.append(Stage("param_strategy", ("replicated", "tp", "fsdp", "fsdp_tp")))
+        else:
+            # inference: no optimizer state; "tp2d" shards weights over BOTH
+            # mesh axes (gather-on-use) — required for ≥70B archs and for
+            # batch-1 long-context decode where the data axis is idle.
+            st.append(Stage("param_strategy", ("replicated", "tp", "tp2d")))
+        if cfg.is_attention_free or cfg.n_heads > 0:
+            st.append(Stage("mixer_tp", (False, True)))
+        st.append(Stage("seq_shard", (False, True)))
+        st.append(Stage("ffn_tp", (False, True) if cfg.d_ff else (False,)))
+        st.append(
+            Stage("moe_mode", ("ep", "tp", "dense") if cfg.is_moe else ("dense",))
+        )
+        st.append(Stage("vocab_shard", (False, True)))
+        st.append(Stage("remat", ("none", "dots", "full") if train else ("none",)))
+        st.append(
+            Stage(
+                "microbatches",
+                (1, 2, 4, 8, 16) if train else (1,),
+            )
+        )
+        if cfg.n_heads > 0 and shape.kind != "decode":
+            st.append(
+                Stage(
+                    "attn_block",
+                    tuple(itertools.product((128, 256, 512), (128, 256, 512))),
+                )
+            )
+        if cfg.is_ssm and shape.kind != "decode":
+            st.append(Stage("scan_chunk", (64, 128, 256)))
+        if shape.kind == "decode" and cfg.n_heads > 0:
+            st.append(Stage("kv_dtype", ("bf16", "int8")))
+        if train:
+            st.append(Stage("grad_comm", ("fp32", "int8", "rs_ag")))
+        st.append(Stage("overlap", (0.0, 0.5, 0.9)))
+        if train:
+            st.append(Stage("opt_dtype", ("float32", "int8")))
+        return st
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    def n_complete(self) -> int:
+        n = 1
+        for s in self.stages:
+            n *= len(s.options)
+        return n
+
+    def n_actions(self, depth: int) -> int:
+        return len(self.stages[depth].options)
+
+    # -- plan construction ---------------------------------------------------
+    def plan_from_actions(self, actions: Sequence[int]) -> SchedulePlan:
+        assert len(actions) == self.n_stages, (len(actions), self.n_stages)
+        kv = {
+            s.name: s.options[a] for s, a in zip(self.stages, actions)
+        }
+        return SchedulePlan(**{**_plan_defaults(self), **kv})
+
+    def default_actions(self) -> List[int]:
+        """The paper-faithful baseline plan's action indices (a sane default
+        schedule, analogous to Halide's master autoscheduler output)."""
+        base = _plan_defaults(self)
+        default = SchedulePlan(**base)
+        out = []
+        for s in self.stages:
+            want = getattr(default, s.name)
+            out.append(s.options.index(want) if want in s.options else 0)
+        return out
+
+    def random_actions(self, rng: _random.Random) -> List[int]:
+        return [rng.randrange(len(s.options)) for s in self.stages]
+
+    def random_plan(self, rng: _random.Random) -> SchedulePlan:
+        return self.plan_from_actions(self.random_actions(rng))
+
+
+def _plan_defaults(space: ScheduleSpace) -> dict:
+    """Values for stages absent from this cell's MDP (single legal action)."""
+    cfg, shape, mesh = space.cfg, space.shape, space.mesh
+    train = shape.kind == "train"
+    # big models can't replicate the model axis at inference: default to 2D
+    big = cfg.param_count() * 2 / mesh.axis("model") > 8 * 2**30
+    small_batch = shape.global_batch < mesh.axis("data")
+    return dict(
+        batch_axes="pod_data" if mesh.multi_pod else "data",
+        param_strategy="fsdp_tp" if train else ("tp2d" if (big or small_batch) else "tp"),
+        mixer_tp=True,
+        ffn_tp=bool(cfg.d_ff),
+        moe_mode="ep" if cfg.is_moe else "dense",
+        vocab_shard=True,
+        remat="dots" if train else "none",
+        microbatches=8 if train else 1,
+        seq_shard=bool(not train and small_batch),
+        attn_block=(256, 256),
+        scan_chunk=128,
+        grad_comm="fp32",
+        overlap=0.5,
+        opt_dtype="float32",
+        kv_dtype="bf16",
+    )

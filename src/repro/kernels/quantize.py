@@ -1,0 +1,75 @@
+"""Int8 rowwise symmetric quant/dequant Pallas-TPU kernels.
+
+Used by the error-feedback compressed gradient all-reduce: quantize before
+putting bytes on the ICI wire, dequantize after.  Both kernels are pure
+memory-bound VPU work — fusing max-reduce + scale + round into one pass
+halves the HBM traffic of the compression step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, C)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quantize_int8(x: jax.Array, *, block_rows: int = 256, interpret: bool = False):
+    R, C = x.shape
+    block_rows = min(block_rows, R)
+    assert R % block_rows == 0
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, C), lambda r: (r, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, C), lambda r: (r, 0)),
+            pl.BlockSpec((block_rows, 1), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), jnp.int8),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "block_rows", "interpret"))
+def dequantize_int8(
+    q: jax.Array,
+    scale: jax.Array,
+    *,
+    dtype=jnp.float32,
+    block_rows: int = 256,
+    interpret: bool = False,
+):
+    R, C = q.shape
+    block_rows = min(block_rows, R)
+    assert R % block_rows == 0
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, C), lambda r: (r, 0)),
+            pl.BlockSpec((block_rows, 1), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, C), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), dtype),
+        interpret=interpret,
+    )(q, scale)

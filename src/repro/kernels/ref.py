@@ -1,0 +1,142 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernels are validated against
+(``tests/test_kernels_*.py`` sweep shapes/dtypes and assert_allclose), and the
+fallback path ``ops.py`` dispatches to when kernels are disabled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (GQA, causal)
+# ---------------------------------------------------------------------------
+def attention(
+    q: jax.Array,  # (B, Hq, S, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,  # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    Skv = k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    groups = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    kk = jnp.repeat(k, groups, axis=1)
+    vv = jnp.repeat(v, groups, axis=1)
+    logits = jnp.einsum(
+        "bhsd,bhtd->bhst", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * scale
+    if causal:
+        # queries are the LAST S positions of the Skv-long key sequence
+        qpos = jnp.arange(S)[:, None] + (Skv - S)
+        kpos = jnp.arange(Skv)[None, :]
+        logits = jnp.where(qpos >= kpos, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 selective scan
+# ---------------------------------------------------------------------------
+def selective_scan(
+    u: jax.Array,  # (B, L, Di)
+    dt: jax.Array,  # (B, L, Di)   (already softplus'd)
+    A: jax.Array,  # (Di, N)      (negative reals)
+    Bm: jax.Array,  # (B, L, N)
+    Cm: jax.Array,  # (B, L, N)
+    D: jax.Array,  # (Di,)
+) -> jax.Array:
+    """y_t = C_t . x_t + D*u_t with x_t = exp(dt_t A) x_{t-1} + dt_t u_t B_t."""
+    Bsz, L, Di = u.shape
+    N = A.shape[1]
+    uf = u.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def step(x, inp):
+        u_t, dt_t, b_t, c_t = inp  # (B,Di),(B,Di),(B,N),(B,N)
+        dA = jnp.exp(dt_t[..., None] * Af[None])  # (B, Di, N)
+        dBu = (dt_t * u_t)[..., None] * b_t[:, None, :]  # (B, Di, N)
+        x = dA * x + dBu
+        y = jnp.einsum("bdn,bn->bd", x, c_t)
+        return x, y
+
+    x0 = jnp.zeros((Bsz, Di, N), jnp.float32)
+    xs = (
+        uf.transpose(1, 0, 2),
+        dtf.transpose(1, 0, 2),
+        Bf.transpose(1, 0, 2),
+        Cf.transpose(1, 0, 2),
+    )
+    _, ys = jax.lax.scan(step, x0, xs)
+    y = ys.transpose(1, 0, 2) + uf * D.astype(jnp.float32)[None, None]
+    return y.astype(u.dtype)
+
+
+def selective_scan_step(
+    x: jax.Array,  # (B, Di, N) carried state
+    u: jax.Array,  # (B, Di)
+    dt: jax.Array,  # (B, Di)
+    A: jax.Array,  # (Di, N)
+    b: jax.Array,  # (B, N)
+    c: jax.Array,  # (B, N)
+    D: jax.Array,  # (Di,)
+):
+    """Single decode step; returns (new_state, y)."""
+    xf = x.astype(jnp.float32)
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A.astype(jnp.float32)[None])
+    dBu = (dt * u).astype(jnp.float32)[..., None] * b.astype(jnp.float32)[:, None, :]
+    xf = dA * xf + dBu
+    y = jnp.einsum("bdn,bn->bd", xf, c.astype(jnp.float32))
+    y = y + u.astype(jnp.float32) * D.astype(jnp.float32)[None]
+    return xf.astype(x.dtype), y.astype(u.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE grouped (capacity-batched) GEMM
+# ---------------------------------------------------------------------------
+def moe_gemm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (E, C, d), w: (E, d, f) -> (E, C, f); f32 accumulation."""
+    out = jnp.einsum(
+        "ecd,edf->ecf",
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Int8 rowwise quantization (gradient compression)
+# ---------------------------------------------------------------------------
+def quantize_int8(x: jax.Array):
+    """Rowwise symmetric int8. x: (R, C) -> (q int8 (R,C), scale f32 (R,1))."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,111 @@
+"""Mamba-1 selective-scan Pallas-TPU kernel (chunked along time).
+
+Tiling: grid = (batch, d_inner blocks, time chunks); time chunks are the
+innermost (sequential) grid axis so the SSM state (d_block × N) lives in VMEM
+scratch and is carried across chunks.  Within a chunk the recurrence is a
+``fori_loop`` over time steps whose body is pure VPU work over the
+(d_block × N) state — on TPU the (8,128)-lane VREG layout wants
+d_block a multiple of 8 and N (=16 for Mamba-1) padded into lanes.
+
+``chunk`` is a schedule-space knob: larger chunks amortize grid overhead and
+HBM→VMEM block transfers; smaller chunks shrink the VMEM working set
+(u/dt/y blocks are (chunk × d_block)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vmem(shape, dtype):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # pragma: no cover
+        return pl.MemorySpace.ANY(shape, dtype)  # type: ignore[attr-defined]
+
+
+def _scan_kernel(
+    u_ref,  # (1, chunk, d_block)
+    dt_ref,  # (1, chunk, d_block)
+    a_ref,  # (d_block, N)
+    b_ref,  # (1, chunk, N)
+    c_ref,  # (1, chunk, N)
+    d_ref,  # (1, d_block)
+    y_ref,  # (1, chunk, d_block)
+    x_ref,  # scratch (d_block, N) f32
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        x_ref[...] = jnp.zeros_like(x_ref)
+
+    a = a_ref[...].astype(jnp.float32)  # (d_block, N)
+    dvec = d_ref[0, :].astype(jnp.float32)  # (d_block,)
+
+    def body(t, _):
+        u_t = u_ref[0, t, :].astype(jnp.float32)  # (d_block,)
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)
+        b_t = b_ref[0, t, :].astype(jnp.float32)  # (N,)
+        c_t = c_ref[0, t, :].astype(jnp.float32)
+        dA = jnp.exp(dt_t[:, None] * a)  # (d_block, N)
+        dBu = (dt_t * u_t)[:, None] * b_t[None, :]
+        x = dA * x_ref[...] + dBu
+        x_ref[...] = x
+        y = jnp.sum(x * c_t[None, :], axis=1) + dvec * u_t
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "d_block", "interpret"))
+def selective_scan(
+    u: jax.Array,  # (B, L, Di)
+    dt: jax.Array,  # (B, L, Di)
+    A: jax.Array,  # (Di, N)
+    Bm: jax.Array,  # (B, L, N)
+    Cm: jax.Array,  # (B, L, N)
+    D: jax.Array,  # (Di,)
+    *,
+    chunk: int = 128,
+    d_block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, L, Di = u.shape
+    N = A.shape[1]
+    chunk = min(chunk, L)
+    d_block = min(d_block, Di)
+    assert L % chunk == 0 and Di % d_block == 0, (L, chunk, Di, d_block)
+    grid = (B, Di // d_block, L // chunk)
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_block), lambda b, di, c: (b, c, di)),
+            pl.BlockSpec((1, chunk, d_block), lambda b, di, c: (b, c, di)),
+            pl.BlockSpec((d_block, N), lambda b, di, c: (di, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, di, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, di, c: (b, c, 0)),
+            pl.BlockSpec((1, d_block), lambda b, di, c: (0, di)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d_block), lambda b, di, c: (b, c, di)),
+        out_shape=jax.ShapeDtypeStruct((B, L, Di), u.dtype),
+        scratch_shapes=[_vmem((d_block, N), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, A, Bm, Cm, D.reshape(1, Di))
+
+
+def vmem_bytes(chunk: int, d_block: int, n_state: int, dtype_bytes: int = 2) -> int:
+    io = (3 * chunk * d_block + 2 * chunk * n_state + d_block * n_state + d_block) * dtype_bytes
+    scratch = d_block * n_state * 4
+    return io + scratch

@@ -1,0 +1,61 @@
+"""ProTuner CLI: search for the best schedule of one (arch × shape) cell.
+
+    python -m repro.launch.autotune --arch phi3.5-moe-42b-a6.6b --shape train_4k
+    python -m repro.launch.autotune --arch deepseek-67b --shape decode_32k \
+        --algo mcts_cost+real_1s --measure     # compile-in-the-loop
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--algo", default="mcts_30s")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--measure", action="store_true",
+                    help="real measurement (XLA compile) at root syncs")
+    ap.add_argument("--budget-s", type=float, default=None)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.core.autotuner import autotune, make_mdp
+    from repro.core.measure import make_measure_fn
+
+    measure_fn = (
+        make_measure_fn(args.arch, args.shape, args.mesh) if args.measure else None
+    )
+    res = autotune(
+        args.arch,
+        args.shape,
+        algo=args.algo,
+        mesh=args.mesh,
+        seed=args.seed,
+        measure_fn=measure_fn,
+        time_budget_s=args.budget_s,
+    )
+    mdp = make_mdp(args.arch, args.shape, args.mesh)
+    terms = mdp.cost_model.terms(res.plan)
+    print(f"[autotune] {args.arch}×{args.shape} algo={res.algo}")
+    print(f"[autotune] best cost {res.cost*1e3:.2f} ms "
+          f"(measured: {res.measured and f'{res.measured*1e3:.2f} ms'}) "
+          f"evals={res.n_evals} measurements={res.n_measurements} "
+          f"wall={res.wall_time_s:.1f}s")
+    print(f"[autotune] plan: {json.dumps(res.plan.to_dict())}")
+    print(f"[autotune] terms: compute={terms.compute_s*1e3:.2f}ms "
+          f"memory={terms.memory_s*1e3:.2f}ms "
+          f"collective={terms.collective_s*1e3:.2f}ms "
+          f"dominant={terms.dominant} feasible={terms.feasible} "
+          f"MFU={terms.details['mfu']:.3f}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(res.to_dict(), f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

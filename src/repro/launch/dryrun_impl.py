@@ -1,0 +1,255 @@
+"""Dry-run implementation: AOT-lower + compile one (arch × shape × mesh)
+cell and extract the roofline record.
+
+Import ONLY from repro.launch.dryrun (which sets XLA_FLAGS first) or from a
+process that already forced the host device count.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import hlo_analysis
+from repro.core import measure as M
+from repro.core.cost_model import HW, AnalyticCostModel
+from repro.core.space import MULTI_POD, SINGLE_POD, SchedulePlan, ScheduleSpace
+from repro.launch.mesh import make_mesh_from_spec, mesh_spec
+from repro.models import transformer
+from repro.sharding.rules import ShardingRules
+from repro.training import optimizer as optim
+from repro.training.train_step import (
+    make_positions,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    shardings_for_train,
+)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        tok_shape = (B, 1) if cfg.input_kind == "tokens" else (B, 1, cfg.d_model)
+        tok_dtype = jnp.int32 if cfg.input_kind == "tokens" else jnp.dtype(cfg.dtype)
+        return {
+            "inputs": sd(tok_shape, tok_dtype),
+            "cur": sd((), jnp.int32),
+        }
+    if cfg.input_kind == "tokens":
+        inputs = sd((B, S), jnp.int32)
+    else:
+        inputs = sd((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+    pos_shape = (B, 3, S) if cfg.pos_kind == "mrope" else (B, S)
+    specs = {
+        "inputs": inputs,
+        "positions": sd(pos_shape, jnp.int32),
+    }
+    if shape.kind == "train":
+        specs["labels"] = sd((B, S), jnp.int32)
+    return specs
+
+
+def _abstract(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def default_plan(cfg, shape, mspec) -> SchedulePlan:
+    space = ScheduleSpace(cfg, shape, mspec)
+    return space.plan_from_actions(space.default_actions())
+
+
+def evaluate_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str = "single",
+    plan: Optional[SchedulePlan] = None,
+    verbose: bool = True,
+) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    multi = mesh_kind == "multi"
+    mspec = mesh_spec(multi)
+    mesh = make_mesh_from_spec(mspec)
+    if plan is None:
+        plan = default_plan(cfg, shape, mspec)
+
+    t0 = time.perf_counter()
+    if shape.kind == "train":
+        lowered = _lower_train(cfg, shape, plan, mesh, mspec)
+    elif shape.kind == "prefill":
+        lowered = _lower_prefill(cfg, shape, plan, mesh, mspec)
+    else:
+        lowered = _lower_decode(cfg, shape, plan, mesh, mspec)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+
+    record = _extract(compiled, cfg, shape, plan, mspec)
+    record.update(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_kind,
+        plan=plan.to_dict(),
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+    )
+    if verbose:
+        ma = record["memory_analysis"]
+        print(
+            f"[dryrun] {arch} × {shape_name} × {mesh_kind}: "
+            f"compile ok in {t_compile:.1f}s | "
+            f"args/device={ma['argument_size_in_bytes']/2**30:.2f} GiB "
+            f"temps/device={ma['temp_size_in_bytes']/2**30:.2f} GiB | "
+            f"flops/device={record['flops_per_device']:.3e} | "
+            f"coll bytes/device={record['coll_bytes_per_chip']:.3e}"
+        )
+        print(
+            f"[dryrun]   terms: compute={record['compute_s']*1e3:.2f} ms "
+            f"memory={record['memory_s']*1e3:.2f} ms "
+            f"collective={record['collective_s']*1e3:.2f} ms "
+            f"-> step={record['step_s']*1e3:.2f} ms "
+            f"(dominant: {record['dominant']}, MFU={record['mfu']:.3f})"
+        )
+    return record
+
+
+# ---------------------------------------------------------------------------
+def _lower_train(cfg, shape, plan, mesh, mspec):
+    oc = optim.OptimizerConfig(moment_dtype=plan.opt_dtype)
+    params = jax.eval_shape(lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    opt_state = jax.eval_shape(lambda: optim.init_opt_state(params, oc))
+    pshard, oshard, bshard, rules = shardings_for_train(
+        cfg, shape, plan, mesh, mspec, params, opt_state
+    )
+    step = make_train_step(cfg, shape, plan, oc, mesh, mspec)
+    batch = input_specs(cfg, shape)
+    bshard = {k: bshard[k] for k in batch}
+    jstep = jax.jit(
+        step,
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, None),
+        donate_argnums=(0, 1),
+    )
+    return jstep.lower(params, opt_state, batch)
+
+
+def _lower_prefill(cfg, shape, plan, mesh, mspec):
+    from jax.sharding import NamedSharding
+
+    params = jax.eval_shape(lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    rules = ShardingRules(cfg, shape, plan, mspec)
+    pspecs = rules.param_pspecs(params)
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    batch = input_specs(cfg, shape)
+    bshard = {
+        "inputs": NamedSharding(mesh, rules.batch_spec(batch["inputs"].ndim)),
+        "positions": NamedSharding(mesh, rules.batch_spec(batch["positions"].ndim)),
+    }
+    step = make_prefill_step(cfg, shape, plan, mesh, mspec)
+    jstep = jax.jit(step, in_shardings=(ns(pspecs), bshard))
+    return jstep.lower(params, batch)
+
+
+def _lower_decode(cfg, shape, plan, mesh, mspec):
+    from jax.sharding import NamedSharding
+
+    params = jax.eval_shape(lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(
+            cfg, shape.global_batch, shape.seq_len, plan.kv_dtype
+        )
+    )
+    rules = ShardingRules(cfg, shape, plan, mspec)
+    pspecs = rules.param_pspecs(params)
+    cspecs = rules.cache_pspecs(cache)
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    specs = input_specs(cfg, shape)
+    ishard = NamedSharding(mesh, rules.batch_spec(specs["inputs"].ndim))
+    step = make_serve_step(cfg, shape, plan, mesh, mspec)
+    jstep = jax.jit(
+        step,
+        in_shardings=(ns(pspecs), ns(cspecs), ishard, NamedSharding(mesh, jax.sharding.PartitionSpec())),
+        out_shardings=(None, ns(cspecs)),
+        donate_argnums=(1,),
+    )
+    return jstep.lower(params, cache, specs["inputs"], specs["cur"])
+
+
+# ---------------------------------------------------------------------------
+def _extract(compiled, cfg, shape, plan, mspec) -> dict:
+    chips = mspec.size
+    ca = compiled.cost_analysis() or {}
+    flops_dev = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    ma = compiled.memory_analysis()
+    mem = {
+        k: int(getattr(ma, k, 0))
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        )
+    } if ma is not None else {}
+    hlo = compiled.as_text()
+    # trip-count-correct analysis (XLA cost_analysis counts loop bodies once;
+    # see core/hlo_analysis.py)
+    ha = hlo_analysis.analyze(hlo)
+    coll = ha["coll"]
+    counts = ha["counts"]
+    wire = float(ha["coll_wire"])
+    coll_bytes = float(sum(coll.values()))
+    flops_dev_corrected = max(ha["dot_flops"], flops_dev)
+    bytes_dev_corrected = max(ha["bytes"], bytes_dev)
+
+    flops_total = flops_dev_corrected * chips
+    bytes_total = bytes_dev_corrected * chips
+    terms = M.combine_terms(flops_total, bytes_total, coll_bytes, chips, plan.overlap)
+    n_active = cfg.active_param_count()
+    model_flops = (
+        6.0 * n_active * shape.tokens
+        if shape.kind == "train"
+        else 2.0 * n_active * shape.tokens
+    )
+    mfu = model_flops / (terms["step_s"] * chips * HW.peak_flops)
+    useful = model_flops / flops_total if flops_total else 0.0
+    bytes_per_device = (
+        mem.get("argument_size_in_bytes", 0)
+        + mem.get("temp_size_in_bytes", 0)
+        + mem.get("output_size_in_bytes", 0)
+        - mem.get("alias_size_in_bytes", 0)
+    )
+    return {
+        **terms,
+        "dominant": max(
+            ("compute", "memory", "collective"),
+            key=lambda k: terms[k + "_s"],
+        ),
+        "flops_per_device": flops_dev_corrected,
+        "flops_per_device_xla_raw": flops_dev,
+        "flops_total": flops_total,
+        "hbm_bytes_total": bytes_total,
+        "coll_bytes_per_chip": coll_bytes,
+        "coll_wire_bytes_per_chip": wire,
+        "coll_by_kind": coll,
+        "coll_counts": counts,
+        "memory_analysis": mem,
+        "bytes_per_device": int(bytes_per_device),
+        "fits_hbm": bool(bytes_per_device <= HW.hbm_bytes),
+        "model_flops": model_flops,
+        "useful_flops_ratio": useful,
+        "mfu": mfu,
+        "chips": chips,
+        "hlo_bytes": len(hlo),
+    }

@@ -1,0 +1,45 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (never module-level device state):
+importing this module must not initialize jax's device backend.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core.space import MULTI_POD, SINGLE_POD, MeshSpec
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, found {len(devices)} "
+            "(launch via repro.launch.dryrun, which forces 512 host devices)"
+        )
+    import numpy as np
+
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def mesh_spec(multi_pod: bool = False) -> MeshSpec:
+    return MULTI_POD if multi_pod else SINGLE_POD
+
+
+def make_mesh_from_spec(spec: MeshSpec) -> jax.sharding.Mesh:
+    import numpy as np
+
+    n = spec.size
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, found {len(devices)}")
+    dev_array = np.asarray(devices[:n]).reshape(spec.shape)
+    return jax.sharding.Mesh(dev_array, spec.names)

@@ -1,0 +1,25 @@
+"""Losses: next-token cross-entropy with f32 logsumexp, optional z-loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(
+    logits: jax.Array,  # (..., V)
+    labels: jax.Array,  # (...,) int32
+    *,
+    z_loss: float = 0.0,
+) -> jax.Array:
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    return jnp.mean(nll)
+
+
+def next_token_loss(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Shifted LM loss: predict tokens[t+1] from logits[t]."""
+    return cross_entropy(logits[:, :-1, :], tokens[:, 1:])

@@ -1,0 +1,134 @@
+"""Int8 error-feedback ring all-reduce for DP gradients (shard_map).
+
+Wire cost: a bf16/f32 ring all-reduce moves ~2·size·dtype bytes per device;
+the int8 ring reduce-scatter + all-gather moves ~2·size·1 byte — a 4–8×
+reduction on the DP axis, which matters on the multi-pod mesh where the DP
+collective crosses the (slow) pod links.  Error feedback keeps the
+quantization noise unbiased across steps: the residual (g - dequant(q)) is
+carried and added to the next step's gradient.
+
+This is one of the schedule-space actions (``grad_comm = int8``); it is also
+independently property-tested (tests/test_grad_compress.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _quant(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q: jax.Array, s: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * s
+
+
+def _ring_allreduce_int8(x: jax.Array, axis: str) -> jax.Array:
+    """All-reduce a (rows, cols) f32 array with int8 payload on the wire.
+
+    Ring reduce-scatter (n-1 ppermute steps of int8 chunks) followed by an
+    int8 ring all-gather.  Chunking is along rows; rows must divide by the
+    axis size (callers pad).
+    """
+    n = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    rows = x.shape[0]
+    chunk = rows // n
+    perm_fwd = [(i, (i + 1) % n) for i in range(n)]
+
+    def get_chunk(arr, c):
+        return jax.lax.dynamic_slice_in_dim(arr, c * chunk, chunk, axis=0)
+
+    # ---- reduce-scatter: after n-1 steps, device i owns the full sum of
+    # chunk (i+1) % n ----
+    def rs_body(step, carry):
+        acc_q, acc_s = carry  # the in-flight chunk, quantized
+        recv_q = jax.lax.ppermute(acc_q, axis, perm_fwd)
+        recv_s = jax.lax.ppermute(acc_s, axis, perm_fwd)
+        # chunk index this device must add at this step
+        c = (idx - step - 1) % n
+        local = get_chunk(x, c)
+        summed = _dequant(recv_q, recv_s) + local
+        q, s = _quant(summed)
+        return q, s
+
+    q0, s0 = _quant(get_chunk(x, idx))  # first hop carries our own chunk
+    acc_q, acc_s = jax.lax.fori_loop(0, n - 1, rs_body, (q0, s0))
+    # device i now owns reduced chunk (i + 1) % n
+    own = (idx + 1) % n
+
+    # ---- all-gather the reduced chunks (n-1 int8 hops) ----
+    def ag_body(step, carry):
+        out, cur_q, cur_s = carry
+        c = (own - step) % n  # chunk id currently held
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, _dequant(cur_q, cur_s), c * chunk, axis=0
+        )
+        cur_q = jax.lax.ppermute(cur_q, axis, perm_fwd)
+        cur_s = jax.lax.ppermute(cur_s, axis, perm_fwd)
+        return out, cur_q, cur_s
+
+    out = jnp.zeros_like(x)
+    out, last_q, last_s = jax.lax.fori_loop(
+        0, n, ag_body, (out, acc_q, acc_s)
+    )
+    return out
+
+
+def compressed_psum(
+    x: jax.Array, axis: str, *, error: jax.Array | None = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Inside shard_map: int8-wire all-reduce with error feedback.
+
+    Returns (reduced, new_error). ``x`` is flattened to (rows, 128) lanes.
+    """
+    n = jax.lax.axis_size(axis)
+    flat = x.astype(jnp.float32).reshape(-1)
+    if error is not None:
+        flat = flat + error.reshape(-1)
+    cols = 128
+    pad = (-flat.size) % (cols * n)
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, cols)
+    # pad rows to divide by n
+    rpad = (-fp.shape[0]) % n
+    fp = jnp.pad(fp, ((0, rpad), (0, 0)))
+    reduced = _ring_allreduce_int8(fp, axis)
+    # error feedback: local contribution actually transmitted vs intended
+    sent_q, sent_s = _quant(fp)
+    new_err = (fp - _dequant(sent_q, sent_s)).reshape(-1)
+    total = fp.size
+    reduced = reduced.reshape(-1)[: flat.size].reshape(x.shape)
+    new_err = new_err[: flat.size].reshape(x.shape)
+    return reduced.astype(x.dtype), new_err.astype(jnp.float32)
+
+
+def make_compressed_allreduce(mesh: Mesh, axis: str = "data"):
+    """Tree-level compressed all-reduce: grads replicated-out over `axis`."""
+
+    def _one(g, e):
+        return compressed_psum(g, axis, error=e)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=(P(axis), P(axis)),
+    )
+    def _sm(gs, es):  # leaves stacked on axis 0 per-device
+        out, err = _one(gs, es)
+        return out, err
+
+    def allreduce(grads_tree, error_tree):
+        return jax.tree.map(
+            lambda g, e: _sm(g, e), grads_tree, error_tree
+        )
+
+    return allreduce

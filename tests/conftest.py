@@ -1,0 +1,18 @@
+"""Shared fixtures. NOTE: never set xla_force_host_platform_device_count
+here — smoke tests and benches must see 1 device; multi-device tests run in
+subprocesses (see test_distributed.py)."""
+import os
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+
+    return jax.random.PRNGKey(0)

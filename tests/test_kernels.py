@@ -1,0 +1,139 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret
+mode on CPU executes the exact kernel bodies)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gemm import moe_gemm
+from repro.kernels.quantize import dequantize_int8, quantize_int8
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.selective_scan import selective_scan
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,S,D,bq,bkv,causal",
+    [
+        (2, 4, 2, 256, 64, 128, 128, True),
+        (1, 8, 8, 128, 32, 64, 64, True),     # MHA
+        (2, 4, 1, 256, 64, 128, 64, True),    # MQA, asymmetric blocks
+        (1, 4, 2, 256, 128, 256, 128, True),  # block_q == S
+        (2, 4, 2, 128, 64, 128, 128, False),  # non-causal
+        (1, 2, 2, 512, 64, 128, 256, True),   # bkv > bq
+    ],
+)
+def test_flash_attention_matches_ref(B, Hq, Hkv, S, D, bq, bkv, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_kv=bkv, interpret=True)
+    exp = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64), jnp.bfloat16)
+    out = flash_attention(q, k, v, block_q=64, block_kv=64, interpret=True)
+    exp = ref.attention(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32), **_tol(jnp.bfloat16)
+    )
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "B,L,Di,N,chunk,dblk",
+    [
+        (2, 64, 32, 8, 16, 16),
+        (1, 128, 64, 16, 64, 32),
+        (2, 32, 16, 4, 32, 16),   # chunk == L
+        (1, 96, 48, 8, 32, 48),   # dblk == Di
+    ],
+)
+def test_selective_scan_matches_ref(B, L, Di, N, chunk, dblk):
+    ks = jax.random.split(KEY, 5)
+    u = jax.random.normal(ks[0], (B, L, Di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, Di)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Di, N)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, L, N))
+    Cm = jax.random.normal(ks[4], (B, L, N))
+    D = jnp.linspace(0.1, 1.0, Di)
+    out = selective_scan(u, dt, A, Bm, Cm, D, chunk=chunk, d_block=dblk, interpret=True)
+    exp = ref.selective_scan(u, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4, rtol=1e-3)
+
+
+def test_selective_scan_step_consistency():
+    """Decode step replays the full scan one token at a time."""
+    B, L, Di, N = 2, 16, 8, 4
+    ks = jax.random.split(KEY, 5)
+    u = jax.random.normal(ks[0], (B, L, Di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, Di)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Di, N)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, L, N))
+    Cm = jax.random.normal(ks[4], (B, L, N))
+    D = jnp.ones(Di) * 0.3
+    full = ref.selective_scan(u, dt, A, Bm, Cm, D)
+    x = jnp.zeros((B, Di, N))
+    ys = []
+    for t in range(L):
+        x, y = ref.selective_scan_step(x, u[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], D)
+        ys.append(y)
+    step_out = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(step_out), np.asarray(full), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape,block", [((3, 7, 64), 4), ((16, 128), 16), ((5, 96), 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, block, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], shape, dtype)
+    w = jax.random.normal(ks[1], (shape[-1],), dtype)
+    out = rmsnorm(x, w, block_rows=block, interpret=True)
+    exp = ref.rmsnorm(x, w)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "E,C,d,f,bc,bf,bd",
+    [(4, 32, 64, 48, 16, 16, 32), (2, 16, 32, 32, 16, 32, 16), (8, 8, 16, 16, 8, 16, 16)],
+)
+def test_moe_gemm_matches_ref(E, C, d, f, bc, bf, bd):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (E, C, d))
+    w = jax.random.normal(ks[1], (E, d, f))
+    out = moe_gemm(x, w, block_c=bc, block_f=bf, block_d=bd, interpret=True)
+    exp = ref.moe_gemm(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("R,C", [(8, 128), (16, 64), (4, 256)])
+def test_quantize_roundtrip(R, C):
+    x = jax.random.normal(KEY, (R, C)) * 3.0
+    q, s = quantize_int8(x, block_rows=4, interpret=True)
+    qr, sr = ref.quantize_int8(x)
+    assert (np.asarray(q) == np.asarray(qr)).all()
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    xd = dequantize_int8(q, s, interpret=True)
+    # error bounded by scale/2 per element
+    err = np.abs(np.asarray(xd) - np.asarray(x))
+    bound = np.asarray(s) * 0.5 + 1e-7
+    assert (err <= bound).all()

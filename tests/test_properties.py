@@ -1,0 +1,156 @@
+"""Hypothesis property tests on system invariants."""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, get_config, get_shape
+from repro.core.autotuner import NoisyCostModel, make_mdp
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.mcts import MCTS, MCTSConfig
+from repro.core.space import SINGLE_POD, MULTI_POD, SchedulePlan, ScheduleSpace
+from repro.kernels import ref
+
+SETTINGS = settings(max_examples=30, deadline=None)
+
+
+@st.composite
+def cell(draw):
+    arch = draw(st.sampled_from(ARCH_IDS))
+    shape = draw(st.sampled_from(["train_4k", "prefill_32k", "decode_32k"]))
+    mesh = draw(st.sampled_from([SINGLE_POD, MULTI_POD]))
+    return arch, shape, mesh
+
+
+@SETTINGS
+@given(cell(), st.integers(0, 2**31 - 1))
+def test_random_plans_always_cost_finite_positive(c, seed):
+    """MDP invariant: EVERY complete schedule has a finite positive cost
+    (infeasible = penalized, never rejected)."""
+    arch, shape_name, mesh = c
+    space = ScheduleSpace(get_config(arch), get_shape(shape_name), mesh)
+    cm = AnalyticCostModel(get_config(arch), get_shape(shape_name), mesh)
+    plan = space.random_plan(random.Random(seed))
+    cost = cm.cost(plan)
+    assert np.isfinite(cost) and cost > 0
+
+
+@SETTINGS
+@given(cell(), st.integers(0, 2**31 - 1))
+def test_action_sequences_roundtrip(c, seed):
+    arch, shape_name, mesh = c
+    space = ScheduleSpace(get_config(arch), get_shape(shape_name), mesh)
+    actions = space.random_actions(random.Random(seed))
+    plan = space.plan_from_actions(actions)
+    # every stage's chosen value is one of its options
+    for s, a in zip(space.stages, actions):
+        assert getattr(plan, s.name) == s.options[a]
+    assert SchedulePlan.from_dict(plan.to_dict()) == plan
+
+
+@SETTINGS
+@given(st.integers(0, 10**6), st.floats(0.05, 0.5))
+def test_noisy_cost_model_deterministic(seed, sigma):
+    mdp = make_mdp("granite-3-2b", "train_4k")
+    noisy = NoisyCostModel(mdp.cost_model, sigma=sigma, seed=seed)
+    plan = mdp.space.plan_from_actions(mdp.space.default_actions())
+    assert noisy.cost(plan) == noisy.cost(plan)
+    assert noisy.cost(plan) > 0
+
+
+@SETTINGS
+@given(
+    st.integers(1, 64),
+    st.integers(16, 200),
+    st.floats(0.1, 100.0),
+)
+def test_quantize_error_bound(rows, cols, scale):
+    key = jax.random.PRNGKey(rows * 1000 + cols)
+    x = jax.random.normal(key, (rows, cols)) * scale
+    q, s = ref.quantize_int8(x)
+    xd = ref.dequantize_int8(q, s)
+    err = np.abs(np.asarray(xd - x))
+    bound = np.asarray(s) * 0.5 + 1e-6
+    assert (err <= bound).all()
+    assert np.abs(np.asarray(q)).max() <= 127
+
+
+@SETTINGS
+@given(st.integers(2, 6), st.integers(1, 6), st.integers(0, 1000))
+def test_mcts_never_produces_invalid_state(depth_actions, iters, seed):
+    """Tree ops keep states inside the MDP for arbitrary budgets."""
+    mdp = make_mdp("granite-moe-1b-a400m", "train_4k")
+    t = MCTS(mdp, MCTSConfig(iters_per_decision=iters, seed=seed))
+    res = t.run_decision()
+    assert 0 <= res.action < mdp.n_actions(())
+    assert mdp.is_terminal(res.best_state)
+    assert len(res.best_state) == mdp.space.n_stages
+
+
+@SETTINGS
+@given(st.integers(0, 10**6))
+def test_rendezvous_rebalance_is_stable(seed):
+    """Adding a host only moves shards TO the new host (rendezvous)."""
+    from repro.runtime.fault_tolerance import rebalance
+
+    rng = random.Random(seed)
+    n = rng.randint(2, 12)
+    hosts = [f"h{i}" for i in range(n)]
+    before = rebalance(hosts, 48)
+    after = rebalance(hosts + ["hNEW"], 48)
+    for s in range(48):
+        if before[s] != after[s]:
+            assert after[s] == "hNEW"
+
+
+@SETTINGS
+@given(st.integers(0, 2**31 - 1), st.integers(1, 16))
+def test_pipeline_index_math_disjoint(seed, hosts):
+    """For any host count dividing the batch, shards partition the batch."""
+    from repro.configs.base import InputShape
+    from repro.data.pipeline import DataConfig, Pipeline
+
+    cfg = get_config("granite-3-2b").reduced()
+    batch = 16
+    if batch % hosts != 0:
+        hosts = 1
+    shape = InputShape("t", 8, batch, "train")
+    full = Pipeline(cfg, shape, DataConfig(seed=seed)).batch_at(2)["inputs"]
+    parts = [
+        Pipeline(cfg, shape, DataConfig(seed=seed, host_count=hosts, host_index=h)).batch_at(2)["inputs"]
+        for h in range(hosts)
+    ]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+@SETTINGS
+@given(st.sampled_from(ARCH_IDS))
+def test_sharding_specs_are_mesh_consistent(arch):
+    """Every generated PartitionSpec references only mesh axes and divides
+    the dims it shards."""
+    from repro.sharding.rules import ShardingRules, _axes_size
+
+    cfg = get_config(arch).reduced()
+    shape = get_shape("train_4k")
+    space = ScheduleSpace(cfg, shape, SINGLE_POD)
+    plan = space.plan_from_actions(space.default_actions())
+    rules = ShardingRules(cfg, shape, plan, SINGLE_POD)
+    from repro.models import transformer
+
+    params = jax.eval_shape(lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = rules.param_pspecs(params)
+
+    def check(leaf, spec):
+        for dim, entry in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                assert a in SINGLE_POD.names
+            assert dim % _axes_size(SINGLE_POD, axes) == 0
+
+    jax.tree.map(check, params, specs,
+                 is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))

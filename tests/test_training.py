@@ -1,0 +1,142 @@
+"""Optimizer, checkpoint, trainer-loop, and data-pipeline tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.core.space import SchedulePlan
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.training import optimizer as optim
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_matches_reference_math():
+    oc = optim.OptimizerConfig(peak_lr=0.1, warmup_steps=0, total_steps=10**9,
+                               b1=0.9, b2=0.99, weight_decay=0.0, clip_norm=1e9)
+    params = {"w": jnp.ones((2, 16))}
+    grads = {"w": jnp.full((2, 16), 0.5)}
+    state = optim.init_opt_state(params, oc)
+    new_params, state, m = optim.apply_updates(params, grads, state, oc)
+    # step 1: mhat = g, vhat = g^2 -> delta = g/|g| = 1 -> w = 1 - lr(~cos at step1)
+    lr1 = float(optim.lr_at(oc, jnp.int32(1)))
+    expect = 1.0 - lr1 * (0.5 / (0.5 + oc.eps))
+    np.testing.assert_allclose(np.asarray(new_params["w"]), expect, rtol=1e-5)
+
+
+def test_grad_clipping_limits_update():
+    oc = optim.OptimizerConfig(peak_lr=0.1, warmup_steps=0, clip_norm=0.1)
+    params = {"w": jnp.zeros((4, 16))}
+    grads = {"w": jnp.full((4, 16), 100.0)}
+    state = optim.init_opt_state(params, oc)
+    _, _, m = optim.apply_updates(params, grads, state, oc)
+    assert float(m["grad_norm"]) > 100.0  # reported pre-clip
+
+
+def test_int8_moments_track_fp32():
+    oc8 = optim.OptimizerConfig(peak_lr=1e-2, warmup_steps=0, moment_dtype="int8")
+    oc32 = optim.OptimizerConfig(peak_lr=1e-2, warmup_steps=0)
+    key = jax.random.PRNGKey(0)
+    params8 = {"w": jax.random.normal(key, (8, 64))}
+    params32 = {"w": params8["w"]}
+    s8, s32 = optim.init_opt_state(params8, oc8), optim.init_opt_state(params32, oc32)
+    assert s8["mu"]["w"]["q"].dtype == jnp.int8
+    for i in range(5):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(i), (8, 64))}
+        params8, s8, _ = optim.apply_updates(params8, g, s8, oc8)
+        params32, s32, _ = optim.apply_updates(params32, g, s32, oc32)
+    diff = float(jnp.max(jnp.abs(params8["w"] - params32["w"])))
+    scale = float(jnp.max(jnp.abs(params32["w"])))
+    assert diff < 0.05 * scale, (diff, scale)
+
+
+def test_lr_schedule_shape():
+    oc = optim.OptimizerConfig(peak_lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(optim.lr_at(oc, jnp.int32(s))) for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0 and lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0 < lrs[3] < 1.0 and lrs[4] == pytest.approx(0.0, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    params = {"a": jnp.arange(6.0).reshape(2, 3), "n": {"b": jnp.ones(4)}}
+    oc = optim.OptimizerConfig()
+    opt = optim.init_opt_state(params, oc)
+    for step in (10, 20, 30):
+        ck.save(step, params, opt, extra={"data_step": step})
+    assert ck.list_steps() == [20, 30]  # gc kept 2
+    p2, o2, step, extra = ck.restore(params, opt)
+    assert step == 30 and extra["data_step"] == 30
+    np.testing.assert_array_equal(np.asarray(p2["a"]), np.asarray(params["a"]))
+
+
+def test_checkpoint_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    params = {"a": jnp.ones((128, 128))}
+    ck.save(1, params, blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_trainer_resume_continues(tmp_path):
+    from repro.training.trainer import Trainer, TrainerConfig
+
+    cfg = get_config("granite-3-2b").reduced()
+    shape = InputShape("t", 32, 4, "train")
+    plan = SchedulePlan(microbatches=1, remat="none")
+    tc = TrainerConfig(total_steps=6, ckpt_every=3, ckpt_dir=str(tmp_path),
+                       log_every=1, ckpt_async=False)
+    tr = Trainer(cfg, shape, plan, tc)
+    tr.run()
+    assert tr.ckpt.latest_step() == 6
+    # resume to a longer horizon: restarts from step 6, not 0
+    tc2 = TrainerConfig(total_steps=8, ckpt_every=4, ckpt_dir=str(tmp_path),
+                        log_every=1, ckpt_async=False)
+    tr2 = Trainer(cfg, shape, plan, tc2)
+    _, _, end = tr2.run()
+    assert end == 8
+    steps_logged = [r["step"] for r in tr2.metrics_log]
+    assert min(steps_logged) >= 7  # continued, not restarted
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+def test_pipeline_deterministic():
+    cfg = get_config("granite-3-2b").reduced()
+    shape = InputShape("t", 16, 4, "train")
+    p1, p2 = Pipeline(cfg, shape), Pipeline(cfg, shape)
+    b1, b2 = p1.batch_at(7), p2.batch_at(7)
+    np.testing.assert_array_equal(b1["inputs"], b2["inputs"])
+
+
+def test_pipeline_host_shards_disjoint_and_complete():
+    cfg = get_config("granite-3-2b").reduced()
+    shape = InputShape("t", 16, 8, "train")
+    full = Pipeline(cfg, shape, DataConfig(host_count=1)).batch_at(3)["inputs"]
+    parts = [
+        Pipeline(cfg, shape, DataConfig(host_count=4, host_index=h)).batch_at(3)["inputs"]
+        for h in range(4)
+    ]
+    np.testing.assert_array_equal(np.concatenate(parts, axis=0), full)
+
+
+def test_pipeline_prefetch_iterator():
+    cfg = get_config("granite-3-2b").reduced()
+    shape = InputShape("t", 16, 2, "train")
+    pipe = Pipeline(cfg, shape)
+    it = pipe.iterate()
+    batches = [next(it) for _ in range(3)]
+    pipe.close()
+    np.testing.assert_array_equal(batches[0]["inputs"], pipe.batch_at(0)["inputs"])
+    np.testing.assert_array_equal(batches[2]["inputs"], pipe.batch_at(2)["inputs"])

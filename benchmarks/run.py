@@ -21,12 +21,13 @@ def main(argv=None) -> None:
                     help="include compile-in-the-loop cost+real runs")
     ap.add_argument("--only", default=None,
                     help="comma list: roofline,fig7,fig8,fig9,fig45,table1,"
-                         "search,fig12,noise")
+                         "search,fig12,noise,engine")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig7_cost, fig8_exec, fig9_budget, fig12_partial_cost,
-                            fig45_ensemble, noise_robustness, roofline,
-                            search_time, table1_configs)
+    from benchmarks import (engine_throughput, fig7_cost, fig8_exec,
+                            fig9_budget, fig12_partial_cost, fig45_ensemble,
+                            noise_robustness, roofline, search_time,
+                            table1_configs)
     from benchmarks.common import SUITE
 
     cells = SUITE[:4] if args.quick else None
@@ -61,6 +62,12 @@ def main(argv=None) -> None:
     if want("search"):
         print("# --- §5.3: search time breakdown ---")
         search_time.main()
+    if want("engine"):
+        print("# --- engine: array MCTS + transposition cache throughput ---")
+        if args.quick:
+            engine_throughput.main(iters=96, n_standard=7)
+        else:
+            engine_throughput.main()
     if want("fig12"):
         print("# --- Fig 1/2 (§3): cost models on partial schedules ---")
         fig12_partial_cost.main()

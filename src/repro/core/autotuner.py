@@ -11,18 +11,16 @@ root synchronization — the ``mcts_cost+real_*`` configurations.
 """
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import math
 from typing import Callable, Optional
 
 from repro.configs import get_config, get_shape
-from repro.core.beam import beam_search, greedy_search
 from repro.core.cost_model import AnalyticCostModel
-from repro.core.ensemble import ProTuner, TuneResult
-from repro.core.mcts import MCTSConfig
+from repro.core.engine import ENGINES
+from repro.core.engine.backend import TABLE1, SearchBackend, resolve_backend
+from repro.core.ensemble import TuneResult
 from repro.core.mdp import ScheduleMDP
-from repro.core.random_search import random_search
 from repro.core.space import MULTI_POD, SINGLE_POD, ScheduleSpace
 
 
@@ -84,21 +82,8 @@ def make_mdp(
     return ScheduleMDP(space, cm)
 
 
-# Table 1 configurations (time budgets scaled: the paper's 30s/10s/1s per
-# decision assume a C++ cost model; ours exposes both iteration- and
-# second-based budgets).
-TABLE1 = {
-    "mcts_30s": MCTSConfig(ucb="paper", iters_per_decision=384),
-    "mcts_10s": MCTSConfig(ucb="paper", iters_per_decision=128),
-    "mcts_1s": MCTSConfig(ucb="paper", iters_per_decision=16),
-    "mcts_Cp10_30s": MCTSConfig(ucb="cp10", iters_per_decision=384),
-    "mcts_sqrt2_30s": MCTSConfig(ucb="sqrt2", iters_per_decision=384),
-    "mcts_cost+real_30s": MCTSConfig(ucb="paper", iters_per_decision=384),
-    "mcts_cost+real_1s": MCTSConfig(ucb="paper", iters_per_decision=16),
-    "mcts_binary_30s": MCTSConfig(
-        ucb="paper", reward_mode="binary", iters_per_decision=384
-    ),  # §4.1 0/1-reward ablation (paper: 9% worse)
-}
+# TABLE1 lives in repro.core.engine.backend (imported above) — re-exported
+# here for backward compatibility with existing callers/tests.
 
 
 def autotune(
@@ -114,30 +99,28 @@ def autotune(
     time_budget_s: Optional[float] = None,
     noise_sigma: float = 0.0,
     mdp: Optional[ScheduleMDP] = None,
+    engine: str = "reference",
+    parallel: bool = False,
+    cache: Optional[bool] = None,
 ) -> TuneResult:
+    """Tune one (arch × shape × mesh) cell.
+
+    ``engine`` selects the MCTS tree representation (``"reference"`` |
+    ``"array"``); ``parallel`` runs ensemble trees in a process pool;
+    ``cache`` forces the shared transposition cache on/off (default: on for
+    the array engine).  All algorithms dispatch through the
+    ``SearchBackend`` protocol (``repro.core.engine.backend``)."""
+    assert engine in ENGINES, engine
     mdp = mdp or make_mdp(arch, shape_name, mesh, noise_sigma, seed)
-    if algo == "beam":
-        res = beam_search(mdp, beam_size=32, passes=5, seed=seed,
-                          time_budget_s=time_budget_s)
-    elif algo == "greedy":
-        res = greedy_search(mdp, seed=seed, time_budget_s=time_budget_s)
-    elif algo == "random":
-        res = random_search(mdp, seed=seed, time_budget_s=time_budget_s,
-                            measure_fn=measure_fn)
-    elif algo in TABLE1 or algo == "mcts":
-        mc = TABLE1.get(algo, TABLE1["mcts_30s"])
-        mc = dataclasses.replace(mc, seed=seed)
-        use_measure = measure_fn if "real" in algo else None
-        tuner = ProTuner(
-            mdp,
-            n_standard=n_standard,
-            n_greedy=n_greedy,
-            mcts_config=mc,
-            measure_fn=use_measure,
-            seed=seed,
-        )
-        res = tuner.run(time_budget_s=time_budget_s)
-        res.algo = algo
-    else:
-        raise ValueError(f"unknown algo {algo!r}")
+    backend: SearchBackend = resolve_backend(algo, engine=engine)
+    res = backend.run(
+        mdp,
+        seed=seed,
+        time_budget_s=time_budget_s,
+        measure_fn=measure_fn,
+        n_standard=n_standard,
+        n_greedy=n_greedy,
+        parallel=parallel,
+        cache=cache,
+    )
     return res

@@ -9,8 +9,10 @@ from __future__ import annotations
 
 import random
 import time
+from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
+from repro.core.engine import CachedMDP
 from repro.core.ensemble import TuneResult
 from repro.core.mdp import ScheduleMDP, State
 
@@ -64,3 +66,42 @@ def greedy_search(mdp: ScheduleMDP, seed: int = 0, **kw) -> TuneResult:
     res = beam_search(mdp, beam_size=1, passes=1, seed=seed, **kw)
     res.algo = "greedy"
     return res
+
+
+# ---------------------------------------------------------------------------
+# SearchBackend adapters (repro.core.engine.backend protocol)
+# ---------------------------------------------------------------------------
+@dataclass
+class BeamBackend:
+    """Beam search as a ``SearchBackend``.  ``cache=True`` wraps the MDP in
+    the shared transposition cache — beam re-prices identical default-
+    completed prefixes across passes, so later passes become nearly free."""
+
+    beam_size: int = 32
+    passes: int = 5
+    name: str = "beam"
+
+    def run(self, mdp, *, seed=0, time_budget_s=None, measure_fn=None,
+            cache: bool = False, **_) -> TuneResult:
+        if cache and not isinstance(mdp, CachedMDP):
+            mdp = CachedMDP(mdp)
+        res = beam_search(
+            mdp,
+            beam_size=self.beam_size,
+            passes=self.passes,
+            seed=seed,
+            time_budget_s=time_budget_s,
+        )
+        if isinstance(mdp, CachedMDP):
+            res.cache_hits = mdp.cache.hits
+            res.cache_misses = mdp.cache.misses
+        return res
+
+
+@dataclass
+class GreedyBackend:
+    name: str = "greedy"
+
+    def run(self, mdp, *, seed=0, time_budget_s=None, measure_fn=None,
+            **_) -> TuneResult:
+        return greedy_search(mdp, seed=seed, time_budget_s=time_budget_s)

@@ -354,7 +354,7 @@ class AnalyticCostModel:
         eff = (bq / (bq + 64.0)) * (bkv / (bkv + 64.0)) / (512.0 / 576.0) ** 2
         eff = min(eff, 1.0)
         if cfg.n_heads:
-            from repro.kernels.flash_attention import vmem_bytes
+            from repro.kernels.geometry import flash_vmem_bytes as vmem_bytes
 
             if 2 * vmem_bytes(bq, bkv, cfg.resolved_head_dim) > hw.vmem_bytes * 0.75:
                 eff *= 0.5

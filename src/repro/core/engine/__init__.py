@@ -1,0 +1,40 @@
+"""Vectorized search engine layer.
+
+Two interchangeable MCTS engines behind one interface:
+
+* ``"reference"`` — the paper-faithful ``Node``-object tree
+  (``repro.core.mcts.MCTS``), kept as the behavioral oracle.
+* ``"array"`` — ``ArrayMCTS``: the same algorithm in flat numpy arrays
+  with batched UCB scoring, exactly equivalent for fixed seeds.
+
+Plus the shared ``TranspositionCache`` / ``CachedMDP`` that memoizes
+``terminal_cost`` / ``partial_cost`` across all ensemble trees and all
+decision rounds, and the ``SearchBackend`` protocol (see ``backend.py``)
+that ``autotune`` routes every algorithm through.
+"""
+from __future__ import annotations
+
+from repro.core.engine.array_mcts import ArrayMCTS
+from repro.core.engine.cache import CachedMDP, TranspositionCache
+
+ENGINES = ("reference", "array")
+
+
+def make_tree(mdp, config, engine: str = "reference"):
+    """Construct one search tree with the requested engine."""
+    if engine == "array":
+        return ArrayMCTS(mdp, config)
+    if engine == "reference":
+        from repro.core.mcts import MCTS
+
+        return MCTS(mdp, config)
+    raise ValueError(f"unknown engine {engine!r}; expected one of {ENGINES}")
+
+
+__all__ = [
+    "ArrayMCTS",
+    "CachedMDP",
+    "TranspositionCache",
+    "ENGINES",
+    "make_tree",
+]

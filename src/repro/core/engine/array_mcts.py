@@ -1,0 +1,350 @@
+"""Array-flattened MCTS: the reference search in flat numpy storage.
+
+Same algorithm as ``repro.core.mcts.MCTS`` — selection, expansion,
+simulation, backprop, all three UCB variants, both simulation policies —
+but the tree lives in flat arrays indexed by node id
+(``visit_counts``, ``sum_cost``, ``sum_reward``, ``best_cost``,
+``node_action``, and a ``children`` id table), so the per-level UCB score
+is computed over all children at once instead of a Python
+``max(..., key=...)`` over ``Node`` objects (after Ragan et al.,
+*Array-Based Monte Carlo Tree Search*): one vectorized numpy expression
+for wide nodes, an unrolled scalar loop over the same arrays for narrow
+nodes where numpy call overhead would dominate.  For ``ScheduleMDP``s the
+engine additionally precomputes the static depth->n_actions table so
+selection and rollout skip per-step MDP dispatch.
+
+Behavioral equivalence is exact, not approximate: the RNG call sequence
+matches the reference line for line, and every float in the UCB score is
+computed with the same IEEE-754 operations in the same order (the scalar
+``math.log`` of the parent count feeds correctly-rounded numpy
+``sqrt``/``divide``/``multiply``), so for a fixed seed both engines select
+identical paths, sample identical terminals, and report identical
+``best_cost`` — the parity tests in ``tests/test_engine.py`` assert this
+for every UCB × simulation combination.
+"""
+from __future__ import annotations
+
+import math
+import random
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.mcts import DecisionResult, MCTSConfig
+
+INF = float("inf")
+
+
+class ArrayMCTS:
+    """Drop-in engine with the reference ``MCTS`` interface
+    (``run_decision`` / ``advance_root`` / ``done``)."""
+
+    def __init__(self, mdp, config: MCTSConfig, capacity: int = 1024):
+        self.mdp = mdp
+        self.cfg = config
+        if config.ucb not in ("paper", "cp10", "sqrt2"):
+            raise ValueError(config.ucb)
+        self._paper = config.ucb in ("paper", "cp10")
+        self._cp = config.cp
+        self.rng = random.Random(config.seed)
+        self.baseline: Optional[float] = None
+        self.global_best = INF
+        self.global_best_state: Optional[Tuple[int, ...]] = None
+        self.sim_time = 0.0
+        self.eval_time = 0.0
+
+        # flat node storage -------------------------------------------------
+        cap = max(capacity, 16)
+        self.size = 0
+        self.visit_counts = np.zeros(cap, dtype=np.int64)
+        self.sum_cost = np.zeros(cap, dtype=np.float64)
+        self.sum_reward = np.zeros(cap, dtype=np.float64)
+        self.best_cost = np.full(cap, INF, dtype=np.float64)
+        self.node_action = np.full(cap, -1, dtype=np.int32)
+        self.n_children = np.zeros(cap, dtype=np.int32)
+        # children[nid, slot] = child id, slots filled in insertion order
+        # (same tie-break order as the reference dict iteration)
+        self.children = np.full((cap, 4), -1, dtype=np.int32)
+        self.untried: List[List[int]] = []
+        self.best_state: List[Optional[Tuple[int, ...]]] = []
+        # python mirrors of the tree STRUCTURE (child ids per node) for the
+        # scalar hot paths; the numpy ``children`` table stays canonical and
+        # feeds the batched-UCB path for wide nodes
+        self._childlist: List[List[int]] = []
+
+        self.root_state: Tuple[int, ...] = mdp.initial_state
+        # fast path: a ScheduleMDP's transition structure is static — states
+        # are action prefixes, the action count depends only on depth, and
+        # ``step`` is tuple append.  Precomputing the depth->n_actions table
+        # lets selection and rollout skip per-step method dispatch entirely
+        # (values and RNG consumption are unchanged).  Other MDPs (test
+        # doubles) take the generic path.
+        self._depth_actions: Optional[List[int]] = None
+        inner = getattr(mdp, "mdp", mdp)  # unwrap CachedMDP
+        from repro.core.mdp import ScheduleMDP
+
+        if isinstance(inner, ScheduleMDP):
+            space = inner.space
+            self._depth_actions = [
+                space.n_actions(d) for d in range(space.n_stages)
+            ]
+        self.root = self._new_node(-1, self.root_state)
+
+    # -- storage management ------------------------------------------------
+    @staticmethod
+    def _extend(arr: np.ndarray, cap: int, fill) -> np.ndarray:
+        out = np.full((cap,) + arr.shape[1:], fill, dtype=arr.dtype)
+        out[: arr.shape[0]] = arr
+        return out
+
+    def _grow_nodes(self):
+        cap = self.visit_counts.shape[0] * 2
+        self.visit_counts = self._extend(self.visit_counts, cap, 0)
+        self.sum_cost = self._extend(self.sum_cost, cap, 0.0)
+        self.sum_reward = self._extend(self.sum_reward, cap, 0.0)
+        self.best_cost = self._extend(self.best_cost, cap, INF)
+        self.node_action = self._extend(self.node_action, cap, -1)
+        self.n_children = self._extend(self.n_children, cap, 0)
+        self.children = self._extend(self.children, cap, -1)
+
+    def _grow_width(self, need: int):
+        w = self.children.shape[1]
+        while w < need:
+            w *= 2
+        wider = np.full((self.children.shape[0], w), -1, dtype=np.int32)
+        wider[:, : self.children.shape[1]] = self.children
+        self.children = wider
+
+    def _new_node(self, action: int, state) -> int:
+        if self.size >= self.visit_counts.shape[0]:
+            self._grow_nodes()
+        nid = self.size
+        self.size += 1
+        self.visit_counts[nid] = 0
+        self.sum_cost[nid] = 0.0
+        self.sum_reward[nid] = 0.0
+        self.best_cost[nid] = INF
+        self.node_action[nid] = action
+        self.n_children[nid] = 0
+        da = self._depth_actions
+        if da is not None:
+            d = len(state)
+            n_act = 0 if d >= len(da) else da[d]
+        else:
+            n_act = 0 if self.mdp.is_terminal(state) else self.mdp.n_actions(state)
+        self.untried.append(list(range(n_act)))
+        self.best_state.append(None)
+        self._childlist.append([])
+        return nid
+
+    # -- tree policy (vectorized) -------------------------------------------
+    def _best_child(self, nid: int) -> int:
+        """argmax of the UCB score over the children.
+
+        Wide nodes take the batched numpy path (one vectorized expression
+        over all children at once); narrow nodes (the common case — most
+        stages have 2-4 options) use an unrolled scalar loop, because numpy
+        call overhead dominates below ~8 elements.  Both paths and the
+        reference compute the same IEEE-754 operations in the same order
+        (``np.sqrt``/``math.sqrt`` are correctly rounded), so scores — and
+        therefore argmax with first-of-ties — are bit-identical."""
+        kids = self._childlist[nid]
+        nc = len(kids)
+        if nc == 1:  # single-option stage: argmax is the only child
+            return kids[0]
+        logn = math.log(max(int(self.visit_counts[nid]), 1))
+        paper = self._paper
+        if nc < 8:
+            vc, sc, sr = self.visit_counts, self.sum_cost, self.sum_reward
+            cp, sqrt = self._cp, math.sqrt
+            best_id = -1
+            best_score = None
+            for cid in kids:
+                n = float(vc[cid])
+                if paper:
+                    # exploit = 1/(sum/n); score = exploit*(1+cp*sqrt(logn/n))
+                    score = (1.0 / (float(sc[cid]) / n)) * (
+                        1.0 + cp * sqrt(logn / n)
+                    )
+                else:
+                    score = float(sr[cid]) / n + sqrt(2.0) * sqrt(2.0 * logn / n)
+                if best_score is None or score > best_score:  # first of ties
+                    best_id, best_score = cid, score
+            return best_id
+        ids = self.children[nid, :nc]
+        n = self.visit_counts[ids].astype(np.float64)
+        if paper:
+            exploit = 1.0 / (self.sum_cost[ids] / n)
+            scores = exploit * (1.0 + self._cp * np.sqrt(logn / n))
+        else:
+            mean_r = self.sum_reward[ids] / n
+            scores = mean_r + math.sqrt(2.0) * np.sqrt(2.0 * logn / n)
+        # np.argmax keeps the first of tied maxima — same rule as max() over
+        # the reference dict's insertion-ordered children
+        return int(ids[int(np.argmax(scores))])
+
+    def _select(self):
+        nid, state = self.root, self.root_state
+        fast = self._depth_actions is not None
+        untried, childlist = self.untried, self._childlist
+        actions, best_child = self.node_action, self._best_child
+        path = [nid]
+        while not untried[nid] and childlist[nid]:
+            nid = best_child(nid)
+            a = int(actions[nid])
+            state = state + (a,) if fast else self.mdp.step(state, a)
+            path.append(nid)
+        return nid, state, path
+
+    def _is_terminal(self, state) -> bool:
+        if self._depth_actions is not None:
+            return len(state) >= len(self._depth_actions)
+        return self.mdp.is_terminal(state)
+
+    def _expand(self, nid: int, state):
+        if self._is_terminal(state) or not self.untried[nid]:
+            return nid, state, None
+        pool = self.untried[nid]
+        a = pool.pop(self.rng.randrange(len(pool)))
+        child_state = (
+            state + (a,) if self._depth_actions is not None
+            else self.mdp.step(state, a)
+        )
+        child = self._new_node(a, child_state)
+        slot = len(self._childlist[nid])
+        if slot >= self.children.shape[1]:
+            self._grow_width(slot + 1)
+        self.children[nid, slot] = child
+        self.n_children[nid] = slot + 1
+        self._childlist[nid].append(child)
+        return child, child_state, child
+
+    # -- default policy ------------------------------------------------------
+    def _simulate(self, state):
+        t0 = time.perf_counter()
+        da = self._depth_actions
+        greedy = self.cfg.simulation == "greedy"
+        if da is not None:
+            # fast rollout: no per-step MDP dispatch; RNG consumption is
+            # identical to the generic path (one randrange per depth, or the
+            # greedy partial_cost sweep with the same tie-break draws)
+            n_stages = len(da)
+            if not greedy:
+                rr = self.rng.randrange
+                d = len(state)
+                state = state + tuple(rr(da[i]) for i in range(d, n_stages))
+            else:
+                partial = self.mdp.partial_cost
+                rand = self.rng.random
+                while len(state) < n_stages:
+                    best_a, best_c = 0, INF
+                    for a in range(da[len(state)]):
+                        c = partial(state + (a,))
+                        if c < best_c or (c == best_c and rand() < 0.5):
+                            best_a, best_c = a, c
+                    state = state + (best_a,)
+        else:
+            while not self.mdp.is_terminal(state):
+                n = self.mdp.n_actions(state)
+                if greedy:
+                    best_a, best_c = 0, INF
+                    for a in range(n):
+                        c = self.mdp.partial_cost(self.mdp.step(state, a))
+                        if c < best_c or (c == best_c and self.rng.random() < 0.5):
+                            best_a, best_c = a, c
+                    state = self.mdp.step(state, best_a)
+                else:
+                    state = self.mdp.step(state, self.rng.randrange(n))
+        self.sim_time += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        cost = self.mdp.terminal_cost(state)
+        self.eval_time += time.perf_counter() - t1
+        return state, cost
+
+    def _backprop(self, path: List[int], terminal, cost: float):
+        if self.baseline is None:
+            self.baseline = cost
+        beat_best = cost < self.global_best
+        if beat_best:
+            self.global_best = cost
+            self.global_best_state = terminal
+        if self.cfg.reward_mode == "binary":
+            r = 1.0 if beat_best else 0.0
+        else:
+            r = (self.baseline / cost) if cost > 0 else 0.0
+        if len(path) < 16:
+            vc, sc, sr, bc = (
+                self.visit_counts, self.sum_cost, self.sum_reward, self.best_cost,
+            )
+            for nid in path:
+                vc[nid] += 1
+                sc[nid] += cost
+                sr[nid] += r
+                if cost < bc[nid]:
+                    bc[nid] = cost
+                    self.best_state[nid] = terminal
+        else:
+            ids = np.asarray(path, dtype=np.int64)
+            self.visit_counts[ids] += 1
+            self.sum_cost[ids] += cost
+            self.sum_reward[ids] += r
+            improved = ids[self.best_cost[ids] > cost]
+            self.best_cost[improved] = cost
+            for nid in improved:
+                self.best_state[int(nid)] = terminal
+
+    def iterate_once(self):
+        nid, state, path = self._select()
+        child, child_state, created = self._expand(nid, state)
+        if created is not None:
+            path.append(created)
+        terminal, cost = self._simulate(child_state)
+        self._backprop(path, terminal, cost)
+
+    # -- decision loop --------------------------------------------------------
+    def run_decision(self) -> DecisionResult:
+        c = self.cfg
+        iters = 0
+        t0 = time.perf_counter()
+        while True:
+            if c.seconds_per_decision is not None:
+                if time.perf_counter() - t0 >= c.seconds_per_decision and iters > 0:
+                    break
+                if iters >= 100000:
+                    break
+            elif iters >= (c.iters_per_decision or 1):
+                break
+            self.iterate_once()
+            iters += 1
+        if not self._childlist[self.root]:
+            self.iterate_once()
+            iters += 1
+        ids = self._childlist[self.root]
+        # winner: best BEST-cost child, ties to the lowest action — same
+        # (best_cost, action) key as the reference
+        keys = [
+            (float(self.best_cost[i]), int(self.node_action[i])) for i in ids
+        ]
+        best = ids[min(range(len(keys)), key=keys.__getitem__)]
+        return DecisionResult(
+            action=int(self.node_action[best]),
+            best_cost=float(self.best_cost[best]),
+            best_state=self.best_state[best],
+            iterations=iters,
+        )
+
+    def advance_root(self, action: int):
+        self.root_state = self.mdp.step(self.root_state, action)
+        nxt = -1
+        for i in self._childlist[self.root]:
+            if int(self.node_action[i]) == action:
+                nxt = i
+                break
+        if nxt < 0:
+            nxt = self._new_node(action, self.root_state)
+        self.root = nxt
+
+    @property
+    def done(self) -> bool:
+        return self.mdp.is_terminal(self.root_state)

@@ -1,0 +1,143 @@
+"""Shared transposition cache over the scheduling MDP.
+
+The MDP is a deterministic prefix tree: a complete schedule IS its action
+tuple, so ``terminal_cost`` is a pure function of the state and
+``partial_cost`` a pure function of the prefix.  The reference ensemble
+re-prices the same complete schedules thousands of times — every one of the
+16 trees re-samples overlapping regions of the space, and tree reuse across
+decision rounds revisits the same subtree terminals round after round.
+``TranspositionCache`` memoizes both signals once, shared across all trees
+and all rounds; ``CachedMDP`` is a drop-in ``ScheduleMDP`` wrapper so every
+search backend (MCTS, ArrayMCTS, beam, random) gets the cache for free.
+
+Values are bit-identical to uncached evaluation (it is a pure memo — no
+rounding, no eviction), so search trajectories are unchanged; only the
+number of cost-model evaluations drops.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+State = Tuple[int, ...]
+
+
+class TranspositionCache:
+    """Memo of {complete action tuple -> terminal cost} and
+    {prefix action tuple -> default-completed partial cost}."""
+
+    __slots__ = ("terminal", "partial", "hits", "misses")
+
+    def __init__(self):
+        self.terminal: Dict[State, float] = {}
+        self.partial: Dict[State, float] = {}
+        self.hits = 0
+        self.misses = 0
+
+    # -- stats ---------------------------------------------------------
+    @property
+    def n_entries(self) -> int:
+        return len(self.terminal) + len(self.partial)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hit_rate,
+            "terminal_entries": len(self.terminal),
+            "partial_entries": len(self.partial),
+        }
+
+    # -- multiprocess merge --------------------------------------------
+    def __getstate__(self):
+        # Workers receive the mappings but fresh counters, so the counts a
+        # worker reports back are exactly the activity of its round and
+        # ``merge`` can sum them without double counting.
+        return {"terminal": self.terminal, "partial": self.partial}
+
+    def __setstate__(self, state):
+        self.terminal = state["terminal"]
+        self.partial = state["partial"]
+        self.hits = 0
+        self.misses = 0
+
+    def merge(self, other: "TranspositionCache") -> None:
+        """Fold a worker-side cache back into this one (deterministic: keys
+        map to identical values everywhere, so update order is irrelevant)."""
+        self.terminal.update(other.terminal)
+        self.partial.update(other.partial)
+        self.hits += other.hits
+        self.misses += other.misses
+
+
+class CachedMDP:
+    """``ScheduleMDP`` wrapper memoizing ``terminal_cost``/``partial_cost``.
+
+    Everything else delegates to the wrapped MDP, so this nests around any
+    object implementing the MDP protocol (including test doubles)."""
+
+    def __init__(self, mdp, cache: TranspositionCache = None):
+        self.mdp = mdp
+        self.cache = cache if cache is not None else TranspositionCache()
+
+    # -- pure structure: straight delegation ---------------------------
+    @property
+    def initial_state(self) -> State:
+        return self.mdp.initial_state
+
+    @property
+    def space(self):
+        return self.mdp.space
+
+    @property
+    def cost_model(self):
+        return self.mdp.cost_model
+
+    def n_actions(self, state: State) -> int:
+        return self.mdp.n_actions(state)
+
+    def step(self, state: State, action: int) -> State:
+        return self.mdp.step(state, action)
+
+    def is_terminal(self, state: State) -> bool:
+        return self.mdp.is_terminal(state)
+
+    def plan(self, state: State):
+        return self.mdp.plan(state)
+
+    # -- memoized cost signals -----------------------------------------
+    def terminal_cost(self, state: State) -> float:
+        tbl = self.cache.terminal
+        c = tbl.get(state)
+        if c is not None:
+            self.cache.hits += 1
+            return c
+        self.cache.misses += 1
+        c = self.mdp.terminal_cost(state)
+        tbl[state] = c
+        return c
+
+    def partial_cost(self, state: State) -> float:
+        if self.mdp.is_terminal(state):
+            return self.terminal_cost(state)
+        tbl = self.cache.partial
+        c = tbl.get(state)
+        if c is not None:
+            self.cache.hits += 1
+            return c
+        self.cache.misses += 1
+        c = self.mdp.partial_cost(state)
+        tbl[state] = c
+        return c
+
+    def __getattr__(self, name):
+        # fall through for any extension attribute on the wrapped MDP;
+        # dunders (and ``mdp`` itself, pre-__init__ during unpickling) must
+        # raise, not recurse
+        if name.startswith("_") or name == "mdp":
+            raise AttributeError(name)
+        return getattr(self.mdp, name)

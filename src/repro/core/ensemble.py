@@ -6,16 +6,35 @@ root; the winning next root is the tree whose subtree found the best
 complete schedule — by cost model, or by **real measurement** of each
 tree's best candidate when ``measure_fn`` is given (``mcts_cost+real_*``).
 All trees then advance to the same child (keeping their subtrees).
+
+Engine layer (PR 1): trees are built by ``repro.core.engine.make_tree`` —
+``engine="reference"`` (the paper-faithful ``Node`` trees) or
+``engine="array"`` (flat-array ``ArrayMCTS``, identical results, batched
+UCB).  With ``cache=True`` (the default for the array engine) all trees
+share one ``TranspositionCache`` so a schedule any tree has ever priced is
+never re-evaluated — across trees *and* across decision rounds.
+``parallel=True`` runs each tree's decision in a ``ProcessPoolExecutor``
+(the old ThreadPool path was GIL-bound): trees are shipped to workers and
+back each round, results are merged in tree-index order, and worker-side
+cache entries are folded back into the shared cache.  Search results —
+plan, cost, and the decision sequence — are identical to the sequential
+path for a fixed seed; the ``n_evals``/``cache_*`` counters can differ
+slightly when the cache is on, because workers run against round-start
+cache snapshots and may re-evaluate states a sibling priced in the same
+round.
 """
 from __future__ import annotations
 
 import dataclasses
+import multiprocessing
+import os
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.core.mcts import MCTS, MCTSConfig
+from repro.core.engine import CachedMDP, TranspositionCache, make_tree
+from repro.core.mcts import MCTSConfig
 from repro.core.mdp import ScheduleMDP, State
 from repro.core.space import SchedulePlan
 
@@ -32,11 +51,27 @@ class TuneResult:
     wall_time_s: float
     decisions: List[dict] = field(default_factory=list)
     algo: str = ""
+    engine: str = "reference"
+    cache_hits: int = 0
+    cache_misses: int = 0
 
     def to_dict(self):
         d = dataclasses.asdict(self)
         d["plan"] = self.plan.to_dict()
         return d
+
+
+def _tree_decision(tree):
+    """Worker task: run one tree's per-decision budget; ship the mutated
+    tree back so its subtree (and cache entries) survive the round.  Cache
+    counters travel as plain ints — ``TranspositionCache.__getstate__``
+    zeroes them on every pickle, so the worker's counts are exactly this
+    round's activity but would be lost on the return trip otherwise."""
+    res = tree.run_decision()
+    stats = None
+    if isinstance(tree.mdp, CachedMDP):
+        stats = (tree.mdp.cache.hits, tree.mdp.cache.misses)
+    return tree, res, stats
 
 
 class ProTuner:
@@ -50,24 +85,40 @@ class ProTuner:
         measure_fn: Optional[Callable[[SchedulePlan], float]] = None,
         parallel: bool = False,
         seed: int = 0,
+        engine: str = "reference",
+        cache: Optional[bool] = None,
     ):
-        self.mdp = mdp
         self.measure_fn = measure_fn
         self.parallel = parallel
-        self.trees: List[MCTS] = []
+        self.engine = engine
+        if cache is None:
+            cache = engine == "array"
+        if cache and not isinstance(mdp, CachedMDP):
+            mdp = CachedMDP(mdp)
+        self.mdp = mdp
+        self.cache: Optional[TranspositionCache] = (
+            mdp.cache if isinstance(mdp, CachedMDP) else None
+        )
+        self.trees = []
         self.greedy_flags: List[bool] = []
         for i in range(n_standard):
             cfg = dataclasses.replace(mcts_config, simulation="random", seed=seed * 1000 + i)
-            self.trees.append(MCTS(mdp, cfg))
+            self.trees.append(make_tree(mdp, cfg, engine))
             self.greedy_flags.append(False)
         for i in range(n_greedy):
             cfg = dataclasses.replace(
                 mcts_config, simulation="greedy", seed=seed * 1000 + 500 + i
             )
-            self.trees.append(MCTS(mdp, cfg))
+            self.trees.append(make_tree(mdp, cfg, engine))
             self.greedy_flags.append(True)
         self._measure_cache: Dict[State, float] = {}
         self.n_measurements = 0
+        self._extra_evals = 0  # worker-side evals (parallel mode)
+        # per-tree counter baseline at submission time; -1 = the tree was
+        # reattached to the shared mdp, so next round's baseline is the
+        # master counter (uncached trees keep private mdp copies whose
+        # counters accumulate across rounds)
+        self._sent_evals: Optional[List[int]] = None
 
     # ------------------------------------------------------------------
     def _measure_state(self, state: State) -> float:
@@ -78,51 +129,107 @@ class ProTuner:
         self.n_measurements += 1
         return t
 
+    # ------------------------------------------------------------------
+    def _round_sequential(self):
+        return [t.run_decision() for t in self.trees]
+
+    def _round_parallel(self, executor: ProcessPoolExecutor):
+        """One decision round across workers; deterministic merge: results
+        and tree replacements happen in tree-index order regardless of
+        completion order, so output is identical to the sequential path."""
+        base_evals = getattr(self.mdp.cost_model, "n_evals", None)
+        if base_evals is not None and self._sent_evals is None:
+            self._sent_evals = [base_evals] * len(self.trees)
+        futures = [executor.submit(_tree_decision, t) for t in self.trees]
+        results = []
+        for i, fut in enumerate(futures):
+            tree, res, stats = fut.result()
+            if base_evals is not None:
+                sent = self._sent_evals[i]
+                if sent < 0:  # was reattached: baseline is the master counter
+                    sent = base_evals
+                worker_evals = getattr(tree.mdp.cost_model, "n_evals", sent)
+                self._extra_evals += max(worker_evals - sent, 0)
+            else:
+                worker_evals = None
+            reattach = self.cache is not None and isinstance(tree.mdp, CachedMDP)
+            if reattach:
+                self.cache.merge(tree.mdp.cache)
+                if stats is not None:
+                    self.cache.hits += stats[0]
+                    self.cache.misses += stats[1]
+                tree.mdp = self.mdp  # reattach the shared cache for next round
+            if base_evals is not None:
+                self._sent_evals[i] = -1 if reattach else worker_evals
+            self.trees[i] = tree
+            results.append(res)
+        return results
+
     def run(self, time_budget_s: Optional[float] = None) -> TuneResult:
         t0 = time.perf_counter()
         decisions: List[dict] = []
-        while not self.trees[0].done:
-            if time_budget_s and time.perf_counter() - t0 > time_budget_s:
-                break
+        executor: Optional[ProcessPoolExecutor] = None
+        try:
             if self.parallel:
-                with ThreadPoolExecutor(max_workers=len(self.trees)) as ex:
-                    results = list(ex.map(lambda t: t.run_decision(), self.trees))
-            else:
-                results = [t.run_decision() for t in self.trees]
+                # forkserver: workers start from a clean process (forking a
+                # jax-threaded parent can deadlock) and stay cheap to spawn —
+                # schedule pricing is deliberately jax-free (kernels/geometry)
+                methods = multiprocessing.get_all_start_methods()
+                method = next(
+                    (m for m in ("forkserver", "fork") if m in methods), None
+                )
+                executor = ProcessPoolExecutor(
+                    max_workers=min(len(self.trees), os.cpu_count() or 2),
+                    mp_context=multiprocessing.get_context(method),
+                )
+            while not self.trees[0].done:
+                if time_budget_s and time.perf_counter() - t0 > time_budget_s:
+                    break
+                if executor is not None:
+                    results = self._round_parallel(executor)
+                else:
+                    results = self._round_sequential()
 
-            # winner: best complete schedule across trees; optionally re-rank
-            # the (deduped) candidates by real measurement (paper Fig. 6's
-            # commented line).
-            if self.measure_fn is not None:
-                ranked = sorted(
-                    range(len(results)), key=lambda i: results[i].best_cost
+                # winner: best complete schedule across trees; optionally
+                # re-rank the (deduped) candidates by real measurement
+                # (paper Fig. 6's commented line).
+                if self.measure_fn is not None:
+                    ranked = sorted(
+                        range(len(results)), key=lambda i: results[i].best_cost
+                    )
+                    seen: Dict[State, int] = {}
+                    for i in ranked:
+                        st = results[i].best_state
+                        if st is not None and st not in seen:
+                            seen[st] = i
+                    best_i = min(
+                        seen.values(),
+                        key=lambda i: self._measure_state(results[i].best_state),
+                    )
+                else:
+                    best_i = min(
+                        range(len(results)), key=lambda i: results[i].best_cost
+                    )
+                win = results[best_i]
+                decisions.append(
+                    {
+                        "depth": len(self.trees[0].root_state),
+                        "stage": self.mdp.space.stages[len(self.trees[0].root_state)].name,
+                        "action": win.action,
+                        "winner_tree": best_i,
+                        "winner_greedy": self.greedy_flags[best_i],
+                        "best_cost": win.best_cost,
+                    }
                 )
-                seen: Dict[State, int] = {}
-                for i in ranked:
-                    st = results[i].best_state
-                    if st is not None and st not in seen:
-                        seen[st] = i
-                best_i = min(
-                    seen.values(),
-                    key=lambda i: self._measure_state(results[i].best_state),
-                )
-            else:
-                best_i = min(
-                    range(len(results)), key=lambda i: results[i].best_cost
-                )
-            win = results[best_i]
-            decisions.append(
-                {
-                    "depth": len(self.trees[0].root_state),
-                    "stage": self.mdp.space.stages[len(self.trees[0].root_state)].name,
-                    "action": win.action,
-                    "winner_tree": best_i,
-                    "winner_greedy": self.greedy_flags[best_i],
-                    "best_cost": win.best_cost,
-                }
-            )
-            for t in self.trees:
-                t.advance_root(win.action)
+                for t in self.trees:
+                    t.advance_root(win.action)
+        finally:
+            if executor is not None:
+                # wait=True: with wait=False the queue-feeder thread can
+                # block forever on the large pickled-tree payloads still in
+                # the call queue after a pool failure, hanging interpreter
+                # exit
+                executor.shutdown(wait=True, cancel_futures=True)
 
         # final schedule: the best complete state any tree ever saw
         best_tree = min(self.trees, key=lambda t: t.global_best)
@@ -136,7 +243,7 @@ class ProTuner:
             final_state = min(cands, key=cands.get)
             measured = cands[final_state]
             final_cost = self.mdp.terminal_cost(final_state)
-        n_evals = getattr(self.mdp.cost_model, "n_evals", 0)
+        n_evals = getattr(self.mdp.cost_model, "n_evals", 0) + self._extra_evals
         return TuneResult(
             plan=self.mdp.plan(final_state),
             cost=final_cost,
@@ -146,4 +253,50 @@ class ProTuner:
             wall_time_s=time.perf_counter() - t0,
             decisions=decisions,
             algo="mcts",
+            engine=self.engine,
+            cache_hits=self.cache.hits if self.cache else 0,
+            cache_misses=self.cache.misses if self.cache else 0,
         )
+
+
+@dataclass
+class MCTSEnsembleBackend:
+    """``SearchBackend`` adapter for the ProTuner ensemble (see
+    ``repro.core.engine.backend``)."""
+
+    algo: str = "mcts"
+    config: MCTSConfig = field(default_factory=MCTSConfig)
+    engine: str = "reference"
+    name: str = "mcts"
+
+    def run(
+        self,
+        mdp,
+        *,
+        seed: int = 0,
+        time_budget_s: Optional[float] = None,
+        measure_fn: Optional[Callable] = None,
+        n_standard: int = 15,
+        n_greedy: int = 1,
+        parallel: bool = False,
+        cache: Optional[bool] = None,
+        **_,
+    ) -> TuneResult:
+        mc = dataclasses.replace(self.config, seed=seed)
+        # paper protocol: only the cost+real_* variants re-rank by real
+        # measurement at root synchronization
+        use_measure = measure_fn if "real" in self.algo else None
+        tuner = ProTuner(
+            mdp,
+            n_standard=n_standard,
+            n_greedy=n_greedy,
+            mcts_config=mc,
+            measure_fn=use_measure,
+            parallel=parallel,
+            seed=seed,
+            engine=self.engine,
+            cache=cache,
+        )
+        res = tuner.run(time_budget_s=time_budget_s)
+        res.algo = self.algo
+        return res

@@ -162,8 +162,6 @@ def _vmem(shape, dtype):
         return pl.MemorySpace.ANY(shape, dtype)  # type: ignore[attr-defined]
 
 
-def vmem_bytes(block_q: int, block_kv: int, head_dim: int, dtype_bytes: int = 2) -> int:
-    """Working-set estimate used by the schedule cost model."""
-    io = (block_q + 2 * block_kv + block_q) * head_dim * dtype_bytes
-    scratch = (block_q * (2 + head_dim)) * 4
-    return io + scratch
+# re-exported from the jax-free geometry module (the cost model and the
+# search workers import it from there without touching jax)
+from repro.kernels.geometry import flash_vmem_bytes as vmem_bytes  # noqa: E402

@@ -1,0 +1,30 @@
+"""Kernel tile-geometry helpers: pure integer math, NO jax imports.
+
+These working-set formulas are shared by the Pallas kernels (to validate
+block choices) and by the analytic cost model (to penalize VMEM-spilling
+schedules).  They live in a jax-free module so the search layer — including
+``ProTuner``'s process-pool workers, which only ever price schedules —
+never drags the XLA runtime into the process.  ``flash_attention`` and
+``selective_scan`` re-export them for backward compatibility.
+"""
+from __future__ import annotations
+
+
+def flash_vmem_bytes(
+    block_q: int, block_kv: int, head_dim: int, dtype_bytes: int = 2
+) -> int:
+    """Working-set estimate for one flash-attention grid step."""
+    io = (block_q + 2 * block_kv + block_q) * head_dim * dtype_bytes
+    scratch = (block_q * (2 + head_dim)) * 4
+    return io + scratch
+
+
+def scan_vmem_bytes(
+    chunk: int, d_block: int, n_state: int, dtype_bytes: int = 2
+) -> int:
+    """Working-set estimate for one selective-scan time chunk."""
+    io = (
+        3 * chunk * d_block + 2 * chunk * n_state + d_block * n_state + d_block
+    ) * dtype_bytes
+    scratch = d_block * n_state * 4
+    return io + scratch

@@ -105,7 +105,5 @@ def selective_scan(
     )(u, dt, A, Bm, Cm, D.reshape(1, Di))
 
 
-def vmem_bytes(chunk: int, d_block: int, n_state: int, dtype_bytes: int = 2) -> int:
-    io = (3 * chunk * d_block + 2 * chunk * n_state + d_block * n_state + d_block) * dtype_bytes
-    scratch = d_block * n_state * 4
-    return io + scratch
+# re-exported from the jax-free geometry module
+from repro.kernels.geometry import scan_vmem_bytes as vmem_bytes  # noqa: E402

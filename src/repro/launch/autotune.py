@@ -20,6 +20,12 @@ def main(argv=None) -> int:
     ap.add_argument("--measure", action="store_true",
                     help="real measurement (XLA compile) at root syncs")
     ap.add_argument("--budget-s", type=float, default=None)
+    ap.add_argument("--engine", default="array",
+                    choices=["reference", "array"],
+                    help="MCTS tree engine (array = vectorized + shared "
+                         "transposition cache; identical results)")
+    ap.add_argument("--parallel", action="store_true",
+                    help="run ensemble trees in a process pool")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
 
@@ -37,6 +43,8 @@ def main(argv=None) -> int:
         seed=args.seed,
         measure_fn=measure_fn,
         time_budget_s=args.budget_s,
+        engine=args.engine,
+        parallel=args.parallel,
     )
     mdp = make_mdp(args.arch, args.shape, args.mesh)
     terms = mdp.cost_model.terms(res.plan)

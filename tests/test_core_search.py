@@ -157,6 +157,7 @@ def test_random_search_improves_with_budget():
     assert r_big.cost <= r_small.cost
 
 
+@pytest.mark.slow  # full 384-iteration Table-1 ensembles, ~30s
 def test_table1_variants_run(mdp):
     from repro.core.autotuner import TABLE1
 

@@ -161,6 +161,7 @@ def test_hlo_analysis_counts_nested_loops():
     assert res["dot_flops"] == pytest.approx(expected, rel=0.01)
 
 
+@pytest.mark.slow  # subprocess XLA compile on a forced 8-device host
 def test_hlo_analysis_collectives_on_sharded_matmul():
     import subprocess
     import sys

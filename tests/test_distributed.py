@@ -7,6 +7,10 @@ import textwrap
 
 import pytest
 
+# every test here spawns a subprocess that re-initializes jax on a forced
+# 8-device host and compiles SPMD programs — minutes, not seconds
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -1,0 +1,123 @@
+"""Pure string-parsing tests for ``repro.core.measure`` — no XLA compile.
+
+Covers ``parse_collective_bytes`` over all five collective kinds, both
+``replica_groups`` syntaxes (v1 ``{{...}}`` and v2 ``[n,g]<=[...]``),
+async ``-start`` forms, tuple output shapes, and ``combine_terms``'s
+roofline arithmetic."""
+import pytest
+
+from repro.core.cost_model import HardwareSpec
+from repro.core.measure import combine_terms, parse_collective_bytes
+
+# one op line per collective kind, shaped like real post-optimization HLO
+HLO = """
+HloModule jit_step, entry_computation_layout={...}
+
+ENTRY %main {
+  %ag = f32[2048,128]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}, use_global_device_ids=true
+  %rs = f32[64]{0} reduce-scatter(%y), channel_id=2, replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}, to_apply=%add
+  %ar = bf16[1024]{0} all-reduce(%z), channel_id=3, replica_groups={{0,1},{2,3}}, to_apply=%add
+  %aa = f32[8,4]{1,0} all-to-all(%w), channel_id=4, replica_groups=[4,8]<=[32], dimensions={0}
+  %cp = f32[16]{0} collective-permute(%v), channel_id=5, source_target_pairs={{0,1},{1,0}}
+}
+"""
+
+
+def test_all_five_kinds_counted():
+    out = parse_collective_bytes(HLO)
+    counts = out["_counts"]
+    assert counts == {
+        "all-gather": 1,
+        "reduce-scatter": 1,
+        "all-reduce": 1,
+        "all-to-all": 1,
+        "collective-permute": 1,
+    }
+
+
+def test_operand_bytes_per_kind():
+    out = parse_collective_bytes(HLO)
+    # all-gather: output 2048*128*4 = 1048576 B, v2 groups [16,16] -> g=16,
+    # operand = output / g
+    assert out["all-gather"] == 1048576 / 16
+    # reduce-scatter: output 64*4 = 256 B, v1 groups of 4 -> operand = out*g
+    assert out["reduce-scatter"] == 256 * 4
+    # all-reduce: output 1024*2 = 2048 B (bf16), operand = output
+    assert out["all-reduce"] == 2048
+    # all-to-all: output 8*4*4 = 128 B, operand = output
+    assert out["all-to-all"] == 128
+    # collective-permute: output 16*4 = 64 B
+    assert out["collective-permute"] == 64
+
+
+def test_ring_wire_bytes():
+    out = parse_collective_bytes(HLO)
+    expect = (
+        1048576 * 15 / 16  # all-gather: S_full*(g-1)/g
+        + 256 * 3  # reduce-scatter: out*(g-1)
+        + 2 * 2048 * 1 / 2  # all-reduce: 2*S*(g-1)/g, g=2
+        + 128 * 7 / 8  # all-to-all: S*(g-1)/g, g=8
+        + 64  # collective-permute: S
+    )
+    assert out["_wire"] == pytest.approx(expect)
+
+
+def test_v1_vs_v2_group_syntax_equivalent():
+    v1 = "  %r = f32[256]{0} all-reduce(%a), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add"
+    v2 = "  %r = f32[256]{0} all-reduce(%a), replica_groups=[1,8]<=[8], to_apply=%add"
+    b1, b2 = parse_collective_bytes(v1), parse_collective_bytes(v2)
+    assert b1["all-reduce"] == b2["all-reduce"] == 1024
+    assert b1["_wire"] == b2["_wire"] == 2 * 1024 * 7 / 8
+
+
+def test_async_start_and_tuple_shapes():
+    # async all-reduce-start with a tuple output: both members counted
+    line = "  %ars = (f32[128]{0}, f32[128]{0}) all-reduce-start(%p), replica_groups={{0,1}}, to_apply=%add"
+    out = parse_collective_bytes(line)
+    assert out["_counts"] == {"all-reduce": 1}
+    assert out["all-reduce"] == 2 * 128 * 4
+
+
+def test_missing_groups_defaults_to_group_of_one():
+    line = "  %cp = f32[32]{0} collective-permute(%v), source_target_pairs={{0,1}}"
+    out = parse_collective_bytes(line)
+    assert out["collective-permute"] == 128
+    assert out["_wire"] == 128
+
+
+def test_non_collective_lines_ignored():
+    text = """
+  %d = f32[128,128]{1,0} dot(%a, %b), lhs_contracting_dims={1}
+  %fusion = bf16[64]{0} fusion(%c), kind=kLoop, calls=%fused
+  %gather = f32[8,16]{1,0} gather(%o, %i), offset_dims={1}
+"""
+    out = parse_collective_bytes(text)
+    assert out["_counts"] == {}
+    assert out["_wire"] == 0.0
+
+
+def test_unknown_dtype_contributes_zero_bytes():
+    line = "  %ar = token[] all-reduce(%t), replica_groups={{0,1}}, to_apply=%add"
+    out = parse_collective_bytes(line)
+    # matched as a collective but the payload is unpriceable -> 0 bytes
+    assert out.get("all-reduce", 0) == 0
+
+
+def test_combine_terms_roofline_math():
+    hw = HardwareSpec()
+    chips = 4
+    flops = 2 * chips * hw.peak_flops  # 2 s of compute across the fleet
+    hbm = 1 * chips * hw.hbm_bw  # 1 s of memory traffic
+    coll = 3 * hw.link_bw  # 3 s of wire per chip
+    t = combine_terms(flops, hbm, coll, chips, overlap=0.5, hw=hw)
+    assert t["compute_s"] == pytest.approx(2.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(3.0)
+    # step = max(compute, memory) + (1-overlap)*collective
+    assert t["step_s"] == pytest.approx(2.0 + 0.5 * 3.0)
+
+
+def test_combine_terms_memory_bound_and_full_overlap():
+    hw = HardwareSpec()
+    t = combine_terms(0.0, 5 * hw.hbm_bw, 2 * hw.link_bw, 1, overlap=1.0, hw=hw)
+    assert t["step_s"] == pytest.approx(5.0)  # collective fully hidden

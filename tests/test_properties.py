@@ -1,11 +1,17 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+The whole module skips cleanly when ``hypothesis`` is not installed (it is
+an optional dev dependency — CI installs it; minimal environments run the
+rest of the tier-1 suite without it)."""
 import random
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import ARCH_IDS, get_config, get_shape
 from repro.core.autotuner import NoisyCostModel, make_mdp

@@ -3,6 +3,10 @@ elastic resume → serve, on reduced configs."""
 import numpy as np
 import pytest
 
+# full end-to-end flows (autotune -> train -> serve, CLI subprocesses,
+# learned-cost training) — the long tail of the suite
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_config
 from repro.configs.base import InputShape
 from repro.core.autotuner import autotune

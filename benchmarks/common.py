@@ -74,12 +74,17 @@ def run_algo(
     time_budget_s: Optional[float] = None,
     n_standard: int = 15,
     n_greedy: int = 1,
+    engine: str = "array",
 ):
     """One search run under the paper protocol (scaled budgets).
 
     The cost model's noise (``noise_seed``) is fixed per cell so all
     algorithms rank against the SAME (imperfect) model; only the search
-    seed varies across repetitions."""
+    seed varies across repetitions.  MCTS runs drive the vectorized array
+    engine (batched leaf evaluation + shared transposition cache) by
+    default — search results are certified identical to the reference
+    engine by ``tests/test_differential.py``; pass ``engine="reference"``
+    for the paper-faithful Node trees."""
     mdp = make_mdp(arch, shape, noise_sigma=noise_sigma, noise_seed=noise_seed)
     if algo.startswith("mcts"):
         from repro.core.ensemble import ProTuner
@@ -92,12 +97,14 @@ def run_algo(
             mcts_config=cfg,
             measure_fn=measure_fn if "real" in algo else None,
             seed=seed,
+            engine=engine,
         )
         res = tuner.run(time_budget_s=time_budget_s)
         res.algo = algo
         return res, mdp
     res = autotune(arch, shape, algo=algo, seed=seed, mdp=mdp,
-                   measure_fn=measure_fn, time_budget_s=time_budget_s)
+                   measure_fn=measure_fn, time_budget_s=time_budget_s,
+                   engine=engine)
     return res, mdp
 
 

@@ -1,24 +1,34 @@
-"""Engine throughput: reference Node-tree MCTS vs the vectorized
-array engine with the shared transposition cache.
+"""Engine throughput: reference Node-tree MCTS vs the vectorized array
+engine, one-at-a-time vs batched leaf evaluation.
 
 Runs the Table-1 ensemble protocol (384 iterations/decision, 15 standard
-+ 1 greedy tree) on two representative cells with both engines — the
-searches are behaviorally identical for the same seeds, so this is a pure
-implementation comparison — and reports:
++ 1 greedy tree) on two representative cells with three engine legs — the
+searches are behaviorally identical for the same seeds (certified by
+``tests/test_differential.py``), so this is a pure implementation
+comparison:
 
-* iterations/sec for each engine,
-* cost-model evaluations saved by the transposition cache (hits), and
-* the end-to-end speedup.  The headline cell (a serving/decode cell,
-  where tree reuse revisits a compact schedule space and transposition
-  sharing is strongest) must clear ≥5×; the train cell shows the
-  lower-bound speedup on a much larger space.
+* ``reference``     — paper-faithful Node trees, scalar pricing, no cache;
+* ``array_scalar``  — the PR-1 array engine: flat arrays + shared
+  transposition cache, but one-at-a-time leaf evaluation;
+* ``array``         — the default engine: lockstep pending-leaf rounds
+  with batched terminal-cost evaluation (``run_decision_batch`` +
+  ``cost_batch``).
+
+Reported per cell: iterations/sec per leg, cache hits/misses, and two
+speedups — ``speedup`` (batched array vs reference, the end-to-end win)
+and ``speedup_batched_vs_scalar`` (the isolated value of batching leaf
+evaluation over the PR-1 engine; the headline decode cell must clear
+≥1.5x).  ``--check`` exits non-zero if the array engine fails to beat the
+reference on the decode cell or any leg diverges — the CI perf-smoke gate
+that keeps the default flip honest.
 
     PYTHONPATH=src python -m benchmarks.engine_throughput
-    PYTHONPATH=src python -m benchmarks.engine_throughput --quick
+    PYTHONPATH=src python -m benchmarks.engine_throughput --quick --check
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 from benchmarks.common import csv_line, emit
@@ -27,7 +37,8 @@ from repro.core.ensemble import ProTuner
 from repro.core.mcts import MCTSConfig
 
 # headline first: the decode cell's compact space is where the shared
-# cache pays off hardest (96%+ hit rate at Table-1 budgets)
+# cache pays off hardest (96%+ hit rate at Table-1 budgets) and where
+# selection/backprop — what the batched driver restructures — dominate
 CELLS = [
     ("granite-3-2b", "decode_32k"),
     ("granite-moe-1b-a400m", "train_4k"),
@@ -36,14 +47,14 @@ CELLS = [
 
 def run_ensemble(cell, engine: str, *, iters: int, n_standard: int,
                  n_greedy: int, seed: int = 0, cache=None,
-                 parallel: bool = False):
+                 parallel: bool = False, batch=None):
     """One full tuning run; returns (TuneResult, iterations, wall_s)."""
     arch, shape = cell
     mdp = make_mdp(arch, shape)
     cfg = MCTSConfig(iters_per_decision=iters, seed=seed)
     tuner = ProTuner(mdp, n_standard=n_standard, n_greedy=n_greedy,
                      mcts_config=cfg, seed=seed, engine=engine, cache=cache,
-                     parallel=parallel)
+                     parallel=parallel, batch=batch)
     t0 = time.perf_counter()
     res = tuner.run()
     wall = time.perf_counter() - t0
@@ -63,6 +74,12 @@ def bench_cell(cell, *, iters: int, n_standard: int, n_greedy: int) -> dict:
     out["reference_iters_per_sec"] = it_ref / wall_ref
     out["reference_evals"] = res_ref.n_evals
 
+    res_sca, it_sca, wall_sca = run_ensemble(
+        cell, "array", batch=False, iters=iters, n_standard=n_standard,
+        n_greedy=n_greedy)
+    out["array_scalar_wall_s"] = wall_sca
+    out["array_scalar_iters_per_sec"] = it_sca / wall_sca
+
     res_arr, it_arr, wall_arr = run_ensemble(
         cell, "array", iters=iters, n_standard=n_standard, n_greedy=n_greedy)
     out["array_wall_s"] = wall_arr
@@ -74,37 +91,66 @@ def bench_cell(cell, *, iters: int, n_standard: int, n_greedy: int) -> dict:
         res_arr.cache_hits + res_arr.cache_misses, 1)
     out["evals_saved"] = res_ref.n_evals - res_arr.n_evals
     out["speedup"] = out["array_iters_per_sec"] / out["reference_iters_per_sec"]
-    out["same_result"] = (res_ref.plan == res_arr.plan
-                          and res_ref.cost == res_arr.cost)
+    out["speedup_batched_vs_scalar"] = (
+        out["array_iters_per_sec"] / out["array_scalar_iters_per_sec"])
+    out["same_result"] = (
+        res_ref.plan == res_sca.plan == res_arr.plan
+        and res_ref.cost == res_sca.cost == res_arr.cost
+        and [d["action"] for d in res_ref.decisions]
+        == [d["action"] for d in res_sca.decisions]
+        == [d["action"] for d in res_arr.decisions])
 
     name = out["cell"]
     csv_line(f"engine_throughput[{name}][reference]", wall_ref * 1e6,
              f"{out['reference_iters_per_sec']:.0f} it/s")
-    csv_line(f"engine_throughput[{name}][array+cache]", wall_arr * 1e6,
+    csv_line(f"engine_throughput[{name}][array+scalar]", wall_sca * 1e6,
+             f"{out['array_scalar_iters_per_sec']:.0f} it/s")
+    csv_line(f"engine_throughput[{name}][array+batched]", wall_arr * 1e6,
              f"{out['array_iters_per_sec']:.0f} it/s")
     csv_line(f"engine_throughput_speedup[{name}]", 0.0,
-             f"{out['speedup']:.1f}x; cache_hits={out['cache_hits']}; "
+             f"{out['speedup']:.1f}x vs reference; "
+             f"{out['speedup_batched_vs_scalar']:.2f}x batched-vs-scalar; "
+             f"cache_hits={out['cache_hits']}; "
              f"hit_rate={out['cache_hit_rate']:.3f}; "
              f"evals_saved={out['evals_saved']}; same={out['same_result']}")
     return out
 
 
-def main(iters: int = 384, n_standard: int = 15, n_greedy: int = 1) -> dict:
+def main(iters: int = 384, n_standard: int = 15, n_greedy: int = 1) -> list:
     rows = [bench_cell(c, iters=iters, n_standard=n_standard,
                        n_greedy=n_greedy) for c in CELLS]
     emit(rows, "engine_throughput")
-    return rows[0]
+    return rows
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="scaled-down budgets (96 iters, 7+1 trees)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless the array engine beats reference on "
+                         "the decode cell with identical results (CI gate)")
     args = ap.parse_args()
     kw = dict(iters=96, n_standard=7) if args.quick else {}
-    r = main(**kw)
-    print(f"# headline {r['cell']}: speedup {r['speedup']:.2f}x  "
-          f"({r['reference_iters_per_sec']:.0f} -> "
+    rows = main(**kw)
+    r = rows[0]
+    print(f"# headline {r['cell']}: {r['speedup']:.2f}x vs reference, "
+          f"{r['speedup_batched_vs_scalar']:.2f}x batched-vs-scalar "
+          f"({r['array_scalar_iters_per_sec']:.0f} -> "
           f"{r['array_iters_per_sec']:.0f} it/s), "
           f"cache hits {r['cache_hits']}, evals saved {r['evals_saved']}, "
           f"identical result: {r['same_result']}")
+    if args.check:
+        bad = []
+        for row in rows:
+            if not row["same_result"]:
+                bad.append(f"{row['cell']}: engines diverged")
+        if rows[0]["speedup"] < 1.0:
+            bad.append(
+                f"{rows[0]['cell']}: array engine slower than reference "
+                f"({rows[0]['speedup']:.2f}x)")
+        if bad:
+            print("# CHECK FAILED: " + "; ".join(bad))
+            sys.exit(1)
+        print("# check passed: array >= reference on the decode cell, "
+              "all legs identical")

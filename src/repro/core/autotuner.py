@@ -56,6 +56,13 @@ class NoisyCostModel:
     def cost(self, plan) -> float:
         return self.inner.cost(plan) * self._noise(plan)
 
+    def cost_batch(self, plans) -> list:
+        """Batched pricing: inner costs amortize through the analytic
+        model's batch path, then the same deterministic per-plan noise is
+        applied — ``cost_batch(plans) == [cost(p) for p in plans]``."""
+        base = self.inner.cost_batch(plans)
+        return [b * self._noise(p) for b, p in zip(base, plans)]
+
     def partial_cost(self, actions, space) -> float:
         defaults = space.default_actions()
         full = list(actions) + defaults[len(actions):]
@@ -99,17 +106,22 @@ def autotune(
     time_budget_s: Optional[float] = None,
     noise_sigma: float = 0.0,
     mdp: Optional[ScheduleMDP] = None,
-    engine: str = "reference",
+    engine: str = "array",
     parallel: bool = False,
     cache: Optional[bool] = None,
+    batch: Optional[bool] = None,
 ) -> TuneResult:
     """Tune one (arch × shape × mesh) cell.
 
-    ``engine`` selects the MCTS tree representation (``"reference"`` |
-    ``"array"``); ``parallel`` runs ensemble trees in a process pool;
-    ``cache`` forces the shared transposition cache on/off (default: on for
-    the array engine).  All algorithms dispatch through the
-    ``SearchBackend`` protocol (``repro.core.engine.backend``)."""
+    ``engine`` selects the MCTS tree representation — the default is the
+    vectorized ``"array"`` engine with batched leaf evaluation and the
+    shared transposition cache, certified bit-identical to the paper-
+    faithful ``"reference"`` engine by ``tests/test_differential.py``;
+    ``parallel`` runs ensemble trees in a process pool; ``cache`` forces
+    the shared transposition cache on/off (default: on for the array
+    engine); ``batch`` forces lockstep batched leaf evaluation on/off
+    (default: on for the array engine).  All algorithms dispatch through
+    the ``SearchBackend`` protocol (``repro.core.engine.backend``)."""
     assert engine in ENGINES, engine
     mdp = mdp or make_mdp(arch, shape_name, mesh, noise_sigma, seed)
     backend: SearchBackend = resolve_backend(algo, engine=engine)
@@ -122,5 +134,6 @@ def autotune(
         n_greedy=n_greedy,
         parallel=parallel,
         cache=cache,
+        batch=batch,
     )
     return res

@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.core.space import MeshSpec, SchedulePlan, ScheduleSpace
@@ -78,6 +78,134 @@ class RooflineTerms:
         return d
 
 
+class _EvalContext:
+    """Plan-independent evaluation state for ``terms``.
+
+    Everything here is a pure function of (cfg, shape, mesh, hw) — or of one
+    of the handful of *discrete* plan fields (the TP degree, the KV dtype,
+    the flash block pair) — so it can be computed once and reused across a
+    whole batch of plans.  Only WHOLE subexpressions are memoized, exactly
+    as the scalar path computes them (the per-layer accumulation loops run
+    unchanged, once per distinct key); sums are never re-associated, so a
+    cached context and a fresh one produce bit-identical IEEE-754 results.
+
+    ``terms`` builds a fresh context per call (scalar evaluation does the
+    same work it always did); ``cost_batch`` keeps one context alive on the
+    model instance and amortizes the accounting across the batch — this
+    asymmetry is what makes batched leaf evaluation cheaper than N scalar
+    calls while ``cost_batch(plans) == [cost(p) for p in plans]`` stays an
+    exact (``==``) contract, enforced by the hypothesis property tests.
+    """
+
+    __slots__ = (
+        "m", "_fwd_total", "_param_bytes", "_param_count", "_groups",
+        "_layer_counts", "_act_mults", "_kv_totals", "_vmem_spill",
+    )
+
+    def __init__(self, model: "AnalyticCostModel"):
+        self.m = model
+        self._fwd_total: Optional[float] = None
+        self._param_bytes: Optional[float] = None
+        self._param_count: Optional[int] = None
+        self._groups: Optional[Dict[str, int]] = None
+        self._layer_counts: Optional[Tuple[int, int, int, int]] = None
+        self._act_mults: Dict[int, Tuple[float, float]] = {}
+        self._kv_totals: Dict[float, float] = {}
+        self._vmem_spill: Dict[Tuple[int, int], bool] = {}
+
+    def fwd_flops(self) -> float:
+        if self._fwd_total is None:
+            self._fwd_total = self.m._fwd_flops()[0]
+        return self._fwd_total
+
+    def param_count(self) -> int:
+        if self._param_count is None:
+            self._param_count = self.m.cfg.param_count()
+        return self._param_count
+
+    def param_bytes(self) -> float:
+        if self._param_bytes is None:
+            self._param_bytes = self.m._param_bytes()
+        return self._param_bytes
+
+    def param_groups(self) -> Dict[str, int]:
+        if self._groups is None:
+            self._groups = self.m._param_groups()
+        return self._groups
+
+    def layer_counts(self) -> Tuple[int, int, int, int]:
+        """(attn, mamba, dense, moe) layer counts per period — integers, so
+        replacing the per-plan counting loop is exact."""
+        if self._layer_counts is None:
+            na = nm = nd = ne = 0
+            for spec in self.m.cfg.layer_plan():
+                if spec.mixer == "attn":
+                    na += 1
+                else:
+                    nm += 1
+                if spec.mlp == "dense":
+                    nd += 1
+                elif spec.mlp == "moe":
+                    ne += 1
+            self._layer_counts = (na, nm, nd, ne)
+        return self._layer_counts
+
+    def act_mults(self, tp: int) -> Tuple[float, float]:
+        """(ffn_mult, mixer_mult) stored-activation multipliers; the loop
+        divides by ``tp`` per term, so it is keyed by the (two-valued) TP
+        degree and re-run verbatim per key."""
+        got = self._act_mults.get(tp)
+        if got is None:
+            cfg = self.m.cfg
+            ffn_mult = 0.0
+            mixer_mult = 0.0
+            for spec in cfg.layer_plan():
+                if spec.mlp == "dense":
+                    ffn_mult += 2 * cfg.d_ff / tp
+                elif spec.mlp == "moe":
+                    ffn_mult += 2 * cfg.experts_per_token * 1.25 * cfg.d_ff / tp
+                if spec.mixer == "attn":
+                    mixer_mult += (
+                        cfg.n_heads + 2 * cfg.n_kv_heads
+                    ) * cfg.resolved_head_dim / tp
+                else:
+                    mixer_mult += 3 * cfg.d_inner / tp
+            got = self._act_mults[tp] = (ffn_mult, mixer_mult)
+        return got
+
+    def kv_total(self, kv_bytes: float) -> float:
+        """Whole-model KV/scan-state bytes before sharding, keyed by the
+        (two-valued) per-element KV byte width."""
+        got = self._kv_totals.get(kv_bytes)
+        if got is None:
+            cfg, shape = self.m.cfg, self.m.shape
+            total = 0.0
+            for spec in cfg.layer_plan():
+                if spec.mixer == "attn":
+                    total += (
+                        2 * shape.global_batch * cfg.n_kv_heads
+                        * shape.seq_len * cfg.resolved_head_dim * kv_bytes
+                    )
+                else:
+                    total += shape.global_batch * cfg.d_inner * (
+                        cfg.ssm_state * F32 + (cfg.conv_width - 1) * BF16
+                    )
+            got = self._kv_totals[kv_bytes] = total
+        return got
+
+    def vmem_spills(self, bq: int, bkv: int) -> bool:
+        key = (bq, bkv)
+        got = self._vmem_spill.get(key)
+        if got is None:
+            from repro.kernels.geometry import flash_vmem_bytes
+
+            got = self._vmem_spill[key] = (
+                2 * flash_vmem_bytes(bq, bkv, self.m.cfg.resolved_head_dim)
+                > self.m.hw.vmem_bytes * 0.75
+            )
+        return got
+
+
 class AnalyticCostModel:
     def __init__(
         self,
@@ -91,6 +219,14 @@ class AnalyticCostModel:
         self.mesh = mesh
         self.hw = hw
         self.n_evals = 0
+        self._batch_ctx: Optional[_EvalContext] = None
+
+    def __getstate__(self):
+        # the batch context holds derived caches only — drop it so pickled
+        # models (process-pool workers) stay lean; it lazily rebuilds
+        d = self.__dict__.copy()
+        d["_batch_ctx"] = None
+        return d
 
     # ------------------------------------------------------------------
     def _sizes(self, plan: SchedulePlan):
@@ -175,11 +311,13 @@ class AnalyticCostModel:
         groups["vocab"] = emb if cfg.tie_embeddings else 2 * emb
         return groups
 
-    def _sharded_param_bytes(self, plan: SchedulePlan, tp: int) -> float:
+    def _sharded_param_bytes(
+        self, plan: SchedulePlan, tp: int, ctx: Optional[_EvalContext] = None
+    ) -> float:
         """Per-model-axis-sharded parameter bytes (before the FSDP split):
         the quantity ZeRO-3 must all-gather and the TP axis must hold."""
         cfg = self.cfg
-        g = self._param_groups()
+        g = ctx.param_groups() if ctx is not None else self._param_groups()
         tot = 0.0
         tot += g["mixer"] / (tp if plan.mixer_tp and tp > 1 else 1)
         tot += g["ffn"] / (tp if plan.ffn_tp and tp > 1 else 1)
@@ -205,31 +343,20 @@ class AnalyticCostModel:
             return BF16 + 2 * 1.1 + 4
         return BF16 + 2 * 4 + 4
 
-    def _activation_bytes_resident(self, plan: SchedulePlan, dp: int, tp: int) -> float:
+    def _activation_bytes_resident(
+        self, plan: SchedulePlan, dp: int, tp: int,
+        ctx: Optional[_EvalContext] = None,
+    ) -> float:
         """Stored activations per chip between fwd and bwd (train only)."""
         cfg, shape = self.cfg, self.shape
         if shape.kind != "train":
             return 0.0
         tokens_local = shape.tokens / dp / max(plan.microbatches, 1)
         d = cfg.d_model
-        plan_layers = cfg.layer_plan()
-        per_layer = {
-            "none": 0.0,
-            "dots": 0.0,
-            "full": 0.0,
-        }
         # bytes stored per token per layer, by remat policy
-        ffn_mult = 0.0
-        mixer_mult = 0.0
-        for spec in plan_layers:
-            if spec.mlp == "dense":
-                ffn_mult += 2 * cfg.d_ff / tp
-            elif spec.mlp == "moe":
-                ffn_mult += 2 * cfg.experts_per_token * 1.25 * cfg.d_ff / tp
-            if spec.mixer == "attn":
-                mixer_mult += (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.resolved_head_dim / tp
-            else:
-                mixer_mult += 3 * cfg.d_inner / tp
+        if ctx is None:
+            ctx = _EvalContext(self)
+        ffn_mult, mixer_mult = ctx.act_mults(tp)
         n_per = cfg.n_periods
         if plan.remat == "full":
             stored = tokens_local * d * n_per  # period-boundary inputs only
@@ -242,22 +369,17 @@ class AnalyticCostModel:
             logits = tokens_local * cfg.vocab_size / (tp if plan.vocab_shard else 1)
         return stored * BF16 + logits * BF16
 
-    def _kv_cache_bytes_per_chip(self, plan: SchedulePlan, dp: int, tp: int) -> float:
+    def _kv_cache_bytes_per_chip(
+        self, plan: SchedulePlan, dp: int, tp: int,
+        ctx: Optional[_EvalContext] = None,
+    ) -> float:
         cfg, shape = self.cfg, self.shape
         if shape.kind != "decode":
             return 0.0
-        total = 0.0
         kv_bytes = 1.06 if plan.kv_dtype == "int8" else BF16  # int8 + scales
-        for spec in cfg.layer_plan():
-            if spec.mixer == "attn":
-                total += (
-                    2 * shape.global_batch * cfg.n_kv_heads
-                    * shape.seq_len * cfg.resolved_head_dim * kv_bytes
-                )
-            else:
-                total += shape.global_batch * cfg.d_inner * (
-                    cfg.ssm_state * F32 + (cfg.conv_width - 1) * BF16
-                )
+        if ctx is None:
+            ctx = _EvalContext(self)
+        total = ctx.kv_total(kv_bytes)
         total *= cfg.n_periods
         dp_used = min(dp, max(shape.global_batch, 1))
         shard = dp_used
@@ -272,18 +394,20 @@ class AnalyticCostModel:
     # Collectives
     # ------------------------------------------------------------------
     def _collective_bytes_per_chip(
-        self, plan: SchedulePlan, dp: int, tp: int, fsdp: int
+        self, plan: SchedulePlan, dp: int, tp: int, fsdp: int,
+        ctx: Optional[_EvalContext] = None,
     ) -> Tuple[float, Dict[str, float]]:
         cfg, shape = self.cfg, self.shape
+        if ctx is None:
+            ctx = _EvalContext(self)
         train = shape.kind == "train"
-        p_bytes = self._param_bytes()
         out: Dict[str, float] = {}
         total = 0.0
         n_mb = max(plan.microbatches, 1)
         tokens_local = shape.tokens / min(dp, max(shape.global_batch, 1))
 
         # --- parameter-axis collectives ---
-        p_tp_bytes = self._sharded_param_bytes(plan, tp)
+        p_tp_bytes = self._sharded_param_bytes(plan, tp, ctx)
         if train:
             if fsdp > 1:
                 # ZeRO-3: AG params in fwd + AG in bwd + RS grads, per microbatch
@@ -303,16 +427,14 @@ class AnalyticCostModel:
         # --- TP activation collectives (per layer pair of matmuls) ---
         if tp > 1:
             act = tokens_local * cfg.d_model * BF16
+            n_attn, n_mamba, n_dense, n_moe = ctx.layer_counts()
             n_ar = 0
-            for spec in cfg.layer_plan():
-                if spec.mixer == "attn" and plan.mixer_tp:
-                    n_ar += 1
-                if spec.mixer == "mamba" and plan.mixer_tp:
-                    n_ar += 1
-                if spec.mlp == "dense" and plan.ffn_tp:
-                    n_ar += 1
-                if spec.mlp == "moe" and plan.moe_mode == "tp":
-                    n_ar += 1
+            if plan.mixer_tp:
+                n_ar += n_attn + n_mamba
+            if plan.ffn_tp:
+                n_ar += n_dense
+            if plan.moe_mode == "tp":
+                n_ar += n_moe
             n_ar *= cfg.n_periods
             wire_one = 2 * act * (tp - 1) / tp  # ring AR
             if plan.seq_shard:
@@ -334,8 +456,16 @@ class AnalyticCostModel:
         return total, out
 
     # ------------------------------------------------------------------
-    def terms(self, plan: SchedulePlan) -> RooflineTerms:
+    def terms(
+        self, plan: SchedulePlan, _ctx: Optional[_EvalContext] = None
+    ) -> RooflineTerms:
+        """Roofline terms for one plan.  Scalar calls build a fresh
+        ``_EvalContext`` (same work as always); ``cost_batch`` passes its
+        persistent context so the plan-independent accounting amortizes
+        across the batch — the returned values are bit-identical either
+        way (see ``_EvalContext``)."""
         self.n_evals += 1
+        ctx = _ctx if _ctx is not None else _EvalContext(self)
         cfg, shape, hw = self.cfg, self.shape, self.hw
         chips = self.mesh.size
         dp, tp, fsdp, tp_on = self._sizes(plan)
@@ -343,10 +473,10 @@ class AnalyticCostModel:
         n_mb = max(plan.microbatches, 1)
 
         # ---- compute ----
-        fwd, _parts = self._fwd_flops()
+        fwd = ctx.fwd_flops()
         if train:
             remat_mult = {"none": 3.0, "dots": 3.35, "full": 4.0}[plan.remat]
-            flops = fwd * remat_mult + 10.0 * cfg.param_count()
+            flops = fwd * remat_mult + 10.0 * ctx.param_count()
         else:
             flops = fwd
         # kernel-tile efficiency: MXU alignment + grid overhead
@@ -354,9 +484,7 @@ class AnalyticCostModel:
         eff = (bq / (bq + 64.0)) * (bkv / (bkv + 64.0)) / (512.0 / 576.0) ** 2
         eff = min(eff, 1.0)
         if cfg.n_heads:
-            from repro.kernels.geometry import flash_vmem_bytes as vmem_bytes
-
-            if 2 * vmem_bytes(bq, bkv, cfg.resolved_head_dim) > hw.vmem_bytes * 0.75:
+            if ctx.vmem_spills(bq, bkv):
                 eff *= 0.5
         mb_eff = 1.0 - 0.015 * math.log2(n_mb) if n_mb > 1 else 1.0
         overlap_tax = 1.05 if plan.overlap >= 0.9 else 1.0
@@ -368,8 +496,7 @@ class AnalyticCostModel:
             compute_s += grid_steps * 0.3e-6 / max(chips / dp, 1)
 
         # ---- memory (HBM traffic, accounted per chip) ----
-        p_bytes = self._param_bytes()
-        p_tp_mem = self._sharded_param_bytes(plan, tp)
+        p_tp_mem = self._sharded_param_bytes(plan, tp, ctx)
         # each chip streams its (TP-sharded, ZeRO-gathered) weights per
         # microbatch pass; fwd + bwd for training
         weight_reads = p_tp_mem * n_mb * (2 if train else 1)
@@ -385,13 +512,15 @@ class AnalyticCostModel:
         )
         if train and plan.remat != "none":
             act_traffic *= 1.35  # recompute re-streams activations
-        kv_traffic = self._kv_cache_bytes_per_chip(plan, dp, tp)
+        kv_traffic = self._kv_cache_bytes_per_chip(plan, dp, tp, ctx)
         per_chip_traffic = weight_reads + opt_traffic + act_traffic + kv_traffic
         hbm_bytes = per_chip_traffic * chips
         memory_s = per_chip_traffic / hw.hbm_bw
 
         # ---- collectives ----
-        coll_per_chip, coll_parts = self._collective_bytes_per_chip(plan, dp, tp, fsdp)
+        coll_per_chip, coll_parts = self._collective_bytes_per_chip(
+            plan, dp, tp, fsdp, ctx
+        )
         link = hw.link_bw
         if self.mesh.multi_pod and plan.batch_axes == "pod_data":
             # DP collectives cross the pod boundary at lower bandwidth
@@ -404,15 +533,15 @@ class AnalyticCostModel:
         collective_s = coll_per_chip / link
 
         # ---- capacity ----
-        p_tp = self._sharded_param_bytes(plan, tp)
+        p_tp = self._sharded_param_bytes(plan, tp, ctx)
         params_per_chip = p_tp / BF16 / fsdp
         resident = params_per_chip * (
             self._state_bytes_per_param(plan) if train else BF16
         )
         per_chip = (
             resident
-            + self._activation_bytes_resident(plan, dp, tp)
-            + self._kv_cache_bytes_per_chip(plan, dp, tp)
+            + self._activation_bytes_resident(plan, dp, tp, ctx)
+            + self._kv_cache_bytes_per_chip(plan, dp, tp, ctx)
         )
         feasible = per_chip <= hw.hbm_bytes * 0.92  # fragmentation headroom
 
@@ -443,6 +572,35 @@ class AnalyticCostModel:
     def cost(self, plan: SchedulePlan) -> float:
         """Scalar cost (estimated step seconds, with infeasibility penalty)."""
         return self.terms(plan).step_s
+
+    def cost_batch(self, plans) -> List[float]:
+        """Batched pricing: ``cost_batch(plans) == [cost(p) for p in plans]``,
+        element-for-element and bit-for-bit.
+
+        The batch path amortizes two things a scalar sweep cannot:
+
+        * the plan-independent accounting (whole-model FLOPs, parameter
+          groups, per-layer multipliers, flash-VMEM geometry) lives in one
+          persistent ``_EvalContext`` instead of being recomputed per plan;
+        * duplicate plans inside the batch — common when concurrent MCTS
+          rollouts collide on a schedule — are priced once (``n_evals``
+          counts each *unique* evaluation once; values are unaffected).
+
+        Cross-plan vectorization stops at the context boundary on purpose:
+        the per-plan arithmetic must replay the scalar model's IEEE-754
+        operation sequence exactly, because bit-identity with the reference
+        engine is the certified contract of the whole engine layer."""
+        ctx = self._batch_ctx
+        if ctx is None:
+            ctx = self._batch_ctx = _EvalContext(self)
+        out: List[float] = []
+        memo: Dict[SchedulePlan, float] = {}
+        for plan in plans:
+            c = memo.get(plan)
+            if c is None:
+                c = memo[plan] = self.terms(plan, ctx).step_s
+            out.append(c)
+        return out
 
     def partial_cost(self, actions, space: ScheduleSpace) -> float:
         """The (unreliable) cost of an INCOMPLETE schedule: complete the

@@ -5,7 +5,31 @@ Two interchangeable MCTS engines behind one interface:
 * ``"reference"`` — the paper-faithful ``Node``-object tree
   (``repro.core.mcts.MCTS``), kept as the behavioral oracle.
 * ``"array"`` — ``ArrayMCTS``: the same algorithm in flat numpy arrays
-  with batched UCB scoring, exactly equivalent for fixed seeds.
+  with batched UCB scoring, exactly equivalent for fixed seeds.  **This is
+  the default engine everywhere** (``autotune``, ``ProTuner``,
+  ``benchmarks.common.run_algo``), certified against the reference across
+  the full (UCB variant × simulation policy × reward mode × seed) grid by
+  the differential harness in ``tests/test_differential.py``.
+
+Batched leaf evaluation (``engine/batch.py``): ``run_decision_batch`` runs
+an ensemble round's K trees in lockstep, queueing each step's K pending
+leaves (and the greedy rollouts' per-depth candidate sweeps) into single
+batched pricing calls.  The pricing seam it rides on:
+
+* ``AnalyticCostModel.cost_batch(plans)`` — contract:
+  ``cost_batch(plans) == [cost(p) for p in plans]`` element-for-element and
+  bit-for-bit; duplicate plans are priced once and ``n_evals`` counts each
+  unique evaluation once.  Plan-independent accounting amortizes across the
+  batch via a persistent evaluation context.
+* ``ScheduleMDP.terminal_cost_batch / partial_cost_batch`` — the same
+  contract at the state level, falling back to scalar loops for cost
+  models without ``cost_batch``.
+* ``CachedMDP.terminal_cost_batch / partial_cost_batch`` — additionally
+  partitions the batch against the ``TranspositionCache`` and prices ONLY
+  the deduplicated misses; ``hits + misses`` advances by exactly the batch
+  size, a state appearing twice in one batch is one miss plus one hit, and
+  a warm cache never changes returned values (hypothesis-tested in
+  ``tests/test_properties.py``).
 
 Plus the shared ``TranspositionCache`` / ``CachedMDP`` that memoizes
 ``terminal_cost`` / ``partial_cost`` across all ensemble trees and all

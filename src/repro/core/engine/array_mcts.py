@@ -89,6 +89,11 @@ class ArrayMCTS:
             self._depth_actions = [
                 space.n_actions(d) for d in range(space.n_stages)
             ]
+        # per-round delta recording (process-pool workers; see
+        # begin_delta/collect_delta/apply_delta)
+        self._delta_base: Optional[int] = None
+        self._delta_parents: List[int] = []
+        self._delta_best: List[int] = []
         self.root = self._new_node(-1, self.root_state)
 
     # -- storage management ------------------------------------------------
@@ -218,6 +223,8 @@ class ArrayMCTS:
         self.children[nid, slot] = child
         self.n_children[nid] = slot + 1
         self._childlist[nid].append(child)
+        if self._delta_base is not None:
+            self._delta_parents.append(nid)
         return child, child_state, child
 
     # -- default policy ------------------------------------------------------
@@ -273,6 +280,7 @@ class ArrayMCTS:
             r = 1.0 if beat_best else 0.0
         else:
             r = (self.baseline / cost) if cost > 0 else 0.0
+        rec = self._delta_best if self._delta_base is not None else None
         if len(path) < 16:
             vc, sc, sr, bc = (
                 self.visit_counts, self.sum_cost, self.sum_reward, self.best_cost,
@@ -284,6 +292,8 @@ class ArrayMCTS:
                 if cost < bc[nid]:
                     bc[nid] = cost
                     self.best_state[nid] = terminal
+                    if rec is not None:
+                        rec.append(nid)
         else:
             ids = np.asarray(path, dtype=np.int64)
             self.visit_counts[ids] += 1
@@ -293,6 +303,8 @@ class ArrayMCTS:
             self.best_cost[improved] = cost
             for nid in improved:
                 self.best_state[int(nid)] = terminal
+                if rec is not None:
+                    rec.append(int(nid))
 
     def iterate_once(self):
         nid, state, path = self._select()
@@ -320,9 +332,12 @@ class ArrayMCTS:
         if not self._childlist[self.root]:
             self.iterate_once()
             iters += 1
+        return self._root_decision(iters)
+
+    def _root_decision(self, iters: int) -> DecisionResult:
+        """Winner among the root's children: best BEST-cost child, ties to
+        the lowest action — same (best_cost, action) key as the reference."""
         ids = self._childlist[self.root]
-        # winner: best BEST-cost child, ties to the lowest action — same
-        # (best_cost, action) key as the reference
         keys = [
             (float(self.best_cost[i]), int(self.node_action[i])) for i in ids
         ]
@@ -333,6 +348,94 @@ class ArrayMCTS:
             best_state=self.best_state[best],
             iterations=iters,
         )
+
+    # -- per-round tree deltas (process-pool transport) ----------------------
+    # A worker runs one decision round and ships back ONLY what the round
+    # changed, instead of pickling the whole tree: the flat stat arrays
+    # (compact numpy buffers), the python-side structure of the round's NEW
+    # nodes, and the point mutations to pre-round nodes (untried pools and
+    # child lists of expanded parents, improved best-states).  The master
+    # applies the delta to the tree object it kept, which reproduces the
+    # worker's post-round tree exactly — asserted by
+    # tests/test_engine.py::test_parallel_delta_merge_equals_whole_tree.
+
+    def begin_delta(self):
+        """Start recording a round's mutations (worker side)."""
+        self._delta_base = self.size
+        self._delta_parents = []
+        self._delta_best = []
+
+    def collect_delta(self) -> dict:
+        """Package the recorded round as a picklable delta and stop
+        recording."""
+        base = self._delta_base
+        size = self.size
+        parents = {n for n in self._delta_parents if n < base}
+        improved = {n for n in self._delta_best if n < base}
+        delta = {
+            "base": base,
+            "size": size,
+            "width": self.children.shape[1],
+            "visit_counts": self.visit_counts[:size].copy(),
+            "sum_cost": self.sum_cost[:size].copy(),
+            "sum_reward": self.sum_reward[:size].copy(),
+            "best_cost": self.best_cost[:size].copy(),
+            "node_action": self.node_action[base:size].copy(),
+            "n_children": self.n_children[:size].copy(),
+            "children": self.children[:size].copy(),
+            "untried_new": self.untried[base:],
+            "childlist_new": self._childlist[base:],
+            "best_state_new": self.best_state[base:],
+            "untried_mut": {n: self.untried[n] for n in parents},
+            "childlist_mut": {n: self._childlist[n] for n in parents},
+            "best_state_mut": {n: self.best_state[n] for n in improved},
+            "rng": self.rng.getstate(),
+            "baseline": self.baseline,
+            "global_best": self.global_best,
+            "global_best_state": self.global_best_state,
+            "sim_time": self.sim_time,
+            "eval_time": self.eval_time,
+        }
+        self._delta_base = None
+        self._delta_parents = []
+        self._delta_best = []
+        return delta
+
+    def apply_delta(self, delta: dict):
+        """Apply a worker's round delta to this (pre-round) tree, making it
+        equal to the worker's post-round tree."""
+        base, size = delta["base"], delta["size"]
+        if base != len(self.untried):
+            raise ValueError(
+                f"delta base {base} does not match tree size {len(self.untried)}"
+            )
+        while self.visit_counts.shape[0] < size:
+            self._grow_nodes()
+        if self.children.shape[1] < delta["width"]:
+            self._grow_width(delta["width"])
+        self.size = size
+        self.visit_counts[:size] = delta["visit_counts"]
+        self.sum_cost[:size] = delta["sum_cost"]
+        self.sum_reward[:size] = delta["sum_reward"]
+        self.best_cost[:size] = delta["best_cost"]
+        self.node_action[base:size] = delta["node_action"]
+        self.n_children[:size] = delta["n_children"]
+        self.children[:size, : delta["width"]] = delta["children"]
+        self.untried.extend(delta["untried_new"])
+        self._childlist.extend(delta["childlist_new"])
+        self.best_state.extend(delta["best_state_new"])
+        for n, pool in delta["untried_mut"].items():
+            self.untried[n] = pool
+        for n, kids in delta["childlist_mut"].items():
+            self._childlist[n] = kids
+        for n, st in delta["best_state_mut"].items():
+            self.best_state[n] = st
+        self.rng.setstate(delta["rng"])
+        self.baseline = delta["baseline"]
+        self.global_best = delta["global_best"]
+        self.global_best_state = delta["global_best_state"]
+        self.sim_time = delta["sim_time"]
+        self.eval_time = delta["eval_time"]
 
     def advance_root(self, action: int):
         self.root_state = self.mdp.step(self.root_state, action)

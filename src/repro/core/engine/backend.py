@@ -10,7 +10,9 @@ A backend is anything with a ``name`` and
 
 ``resolve_backend(algo, engine=...)`` maps the paper's Table-1 algorithm
 names to configured backend instances; ``engine`` selects the MCTS tree
-representation (``"reference"`` Node objects or ``"array"`` flat numpy).
+representation — ``"array"`` flat numpy with batched leaf evaluation (the
+default, differential-tested against the reference) or ``"reference"``
+Node objects.
 """
 from __future__ import annotations
 
@@ -52,7 +54,7 @@ TABLE1 = {
 }
 
 
-def resolve_backend(algo: str, engine: str = "reference") -> SearchBackend:
+def resolve_backend(algo: str, engine: str = "array") -> SearchBackend:
     """Map an algorithm name (paper §5 protocol) to a configured backend."""
     # imported here: beam/random/ensemble all define backends and import
     # TuneResult from ensemble, which imports this package

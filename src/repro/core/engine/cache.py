@@ -16,7 +16,7 @@ number of cost-model evaluations drops.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 State = Tuple[int, ...]
 
@@ -133,6 +133,65 @@ class CachedMDP:
         c = self.mdp.partial_cost(state)
         tbl[state] = c
         return c
+
+    # -- batched cost signals ------------------------------------------
+    # Contract (shared by both methods): values equal the scalar methods
+    # element-for-element; hits + misses advance by exactly len(states);
+    # only MISSES reach the wrapped MDP, deduplicated, in first-occurrence
+    # order — a state appearing twice in one batch is one miss plus one
+    # hit, exactly as if the batch had been priced sequentially.  A warm
+    # cache therefore never changes returned values, only the hit count.
+
+    def _batch(self, states, tbl, price) -> List[float]:
+        out: List[Optional[float]] = [None] * len(states)
+        pending: Dict[State, None] = {}  # dedup, insertion-ordered
+        hits = 0
+        for i, s in enumerate(states):
+            c = tbl.get(s)
+            if c is not None:
+                out[i] = c
+                hits += 1
+            elif s in pending:
+                hits += 1  # duplicate miss: sequential order would hit
+            else:
+                pending[s] = None
+        self.cache.hits += hits
+        self.cache.misses += len(pending)
+        if pending:
+            miss_states = list(pending)
+            for s, c in zip(miss_states, price(miss_states)):
+                tbl[s] = c
+            for i, s in enumerate(states):
+                if out[i] is None:
+                    out[i] = tbl[s]
+        return out
+
+    def terminal_cost_batch(self, states: Sequence[State]) -> List[float]:
+        price = getattr(self.mdp, "terminal_cost_batch", None)
+        if price is None:
+            price = lambda miss: [self.mdp.terminal_cost(s) for s in miss]
+        return self._batch(states, self.cache.terminal, price)
+
+    def partial_cost_batch(self, states: Sequence[State]) -> List[float]:
+        """Mixed batches allowed: terminal states route to the terminal
+        table (as the scalar ``partial_cost`` does)."""
+        is_terminal = self.mdp.is_terminal
+        term_idx = [i for i, s in enumerate(states) if is_terminal(s)]
+        if not term_idx:
+            price = getattr(self.mdp, "partial_cost_batch", None)
+            if price is None:
+                price = lambda miss: [self.mdp.partial_cost(s) for s in miss]
+            return self._batch(states, self.cache.partial, price)
+        term_set = set(term_idx)
+        part_idx = [i for i in range(len(states)) if i not in term_set]
+        out: List[Optional[float]] = [None] * len(states)
+        for i, c in zip(term_idx,
+                        self.terminal_cost_batch([states[i] for i in term_idx])):
+            out[i] = c
+        for i, c in zip(part_idx,
+                        self.partial_cost_batch([states[i] for i in part_idx])):
+            out[i] = c
+        return out
 
     def __getattr__(self, name):
         # fall through for any extension attribute on the wrapped MDP;

@@ -7,25 +7,34 @@ complete schedule — by cost model, or by **real measurement** of each
 tree's best candidate when ``measure_fn`` is given (``mcts_cost+real_*``).
 All trees then advance to the same child (keeping their subtrees).
 
-Engine layer (PR 1): trees are built by ``repro.core.engine.make_tree`` —
-``engine="reference"`` (the paper-faithful ``Node`` trees) or
-``engine="array"`` (flat-array ``ArrayMCTS``, identical results, batched
-UCB).  With ``cache=True`` (the default for the array engine) all trees
-share one ``TranspositionCache`` so a schedule any tree has ever priced is
-never re-evaluated — across trees *and* across decision rounds.
+Engine layer: trees are built by ``repro.core.engine.make_tree`` —
+``engine="array"`` (the default: flat-array ``ArrayMCTS``, identical
+results, batched UCB) or ``engine="reference"`` (the paper-faithful
+``Node`` trees, kept as the oracle).  With ``cache=True`` (the default for
+the array engine) all trees share one ``TranspositionCache`` so a schedule
+any tree has ever priced is never re-evaluated — across trees *and* across
+decision rounds.  With ``batch=True`` (also the array default) sequential
+decision rounds run the trees in LOCKSTEP: each step's K concurrent
+simulations queue their pending leaves into one ``terminal_cost_batch``
+call (``repro.core.engine.batch``) — results are identical to the
+per-tree loop, and with the cache on so are the aggregate cache/eval
+counters (uncached, in-batch dedup can only lower ``n_evals``).
 ``parallel=True`` runs each tree's decision in a ``ProcessPoolExecutor``
-(the old ThreadPool path was GIL-bound): trees are shipped to workers and
-back each round, results are merged in tree-index order, and worker-side
-cache entries are folded back into the shared cache.  Search results —
-plan, cost, and the decision sequence — are identical to the sequential
-path for a fixed seed; the ``n_evals``/``cache_*`` counters can differ
-slightly when the cache is on, because workers run against round-start
-cache snapshots and may re-evaluate states a sibling priced in the same
-round.
+(the old ThreadPool path was GIL-bound): results are merged in tree-index
+order regardless of completion order.  Array trees return per-round tree
+DELTAS (new/updated node slices + this round's new cache entries) instead
+of whole pickled trees — the return payload that made the pool lose to
+sequential below ~4 cores; reference trees keep the whole-tree round trip.
+Search results — plan, cost, and the decision sequence — are identical to
+the sequential path for a fixed seed; the ``n_evals``/``cache_*`` counters
+can differ slightly when the cache is on, because workers run against
+round-start cache snapshots and may re-evaluate states a sibling priced in
+the same round.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import multiprocessing
 import os
 import time
@@ -34,6 +43,8 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.engine import CachedMDP, TranspositionCache, make_tree
+from repro.core.engine.array_mcts import ArrayMCTS
+from repro.core.engine.batch import run_decision_batch
 from repro.core.mcts import MCTSConfig
 from repro.core.mdp import ScheduleMDP, State
 from repro.core.space import SchedulePlan
@@ -62,16 +73,43 @@ class TuneResult:
 
 
 def _tree_decision(tree):
-    """Worker task: run one tree's per-decision budget; ship the mutated
-    tree back so its subtree (and cache entries) survive the round.  Cache
-    counters travel as plain ints — ``TranspositionCache.__getstate__``
-    zeroes them on every pickle, so the worker's counts are exactly this
-    round's activity but would be lost on the return trip otherwise."""
+    """Worker task (reference engine): run one tree's per-decision budget;
+    ship the mutated tree back so its subtree (and cache entries) survive
+    the round.  Cache counters travel as plain ints —
+    ``TranspositionCache.__getstate__`` zeroes them on every pickle, so the
+    worker's counts are exactly this round's activity but would be lost on
+    the return trip otherwise."""
     res = tree.run_decision()
     stats = None
     if isinstance(tree.mdp, CachedMDP):
         stats = (tree.mdp.cache.hits, tree.mdp.cache.misses)
     return tree, res, stats
+
+
+def _tree_decision_delta(tree):
+    """Worker task (array engine): run one tree's per-decision budget and
+    return the round's TREE DELTA — the new/updated node slices — instead
+    of the whole pickled tree (the whole-tree return trip is what made the
+    pool lose to sequential below ~4 cores).  New cache entries ship as
+    plain dict slices: entries are append-only and insertion-ordered, so
+    everything past the round-start lengths is exactly this round's
+    additions."""
+    cached = isinstance(tree.mdp, CachedMDP)
+    if cached:
+        cache = tree.mdp.cache
+        base_t, base_p = len(cache.terminal), len(cache.partial)
+    tree.begin_delta()
+    res = tree.run_decision()
+    delta = tree.collect_delta()
+    stats = cache_new = None
+    if cached:
+        stats = (cache.hits, cache.misses)
+        cache_new = (
+            dict(itertools.islice(cache.terminal.items(), base_t, None)),
+            dict(itertools.islice(cache.partial.items(), base_p, None)),
+        )
+    n_evals = getattr(tree.mdp.cost_model, "n_evals", None)
+    return delta, res, stats, cache_new, n_evals
 
 
 class ProTuner:
@@ -85,14 +123,18 @@ class ProTuner:
         measure_fn: Optional[Callable[[SchedulePlan], float]] = None,
         parallel: bool = False,
         seed: int = 0,
-        engine: str = "reference",
+        engine: str = "array",
         cache: Optional[bool] = None,
+        batch: Optional[bool] = None,
     ):
         self.measure_fn = measure_fn
         self.parallel = parallel
         self.engine = engine
         if cache is None:
             cache = engine == "array"
+        if batch is None:
+            batch = engine == "array"
+        self.batch = batch
         if cache and not isinstance(mdp, CachedMDP):
             mdp = CachedMDP(mdp)
         self.mdp = mdp
@@ -131,19 +173,53 @@ class ProTuner:
 
     # ------------------------------------------------------------------
     def _round_sequential(self):
+        if self.batch and all(isinstance(t, ArrayMCTS) for t in self.trees):
+            # lockstep pending-leaf round: the K trees' concurrent
+            # simulations price through ONE terminal_cost_batch call per
+            # step — results identical to the per-tree loop (engine/batch)
+            return run_decision_batch(self.trees, self.mdp)
         return [t.run_decision() for t in self.trees]
 
     def _round_parallel(self, executor: ProcessPoolExecutor):
         """One decision round across workers; deterministic merge: results
-        and tree replacements happen in tree-index order regardless of
-        completion order, so output is identical to the sequential path."""
+        and tree updates happen in tree-index order regardless of
+        completion order, so output is identical to the sequential path.
+        Array trees travel one-way: the worker returns a per-round tree
+        delta applied to the master's kept tree object; reference trees
+        keep the PR-1 whole-tree round trip."""
         base_evals = getattr(self.mdp.cost_model, "n_evals", None)
         if base_evals is not None and self._sent_evals is None:
             self._sent_evals = [base_evals] * len(self.trees)
-        futures = [executor.submit(_tree_decision, t) for t in self.trees]
+        futures = [
+            executor.submit(
+                _tree_decision_delta if isinstance(t, ArrayMCTS)
+                else _tree_decision,
+                t,
+            )
+            for t in self.trees
+        ]
         results = []
         for i, fut in enumerate(futures):
-            tree, res, stats = fut.result()
+            got = fut.result()
+            if isinstance(self.trees[i], ArrayMCTS):
+                # delta path: the master's tree object persists
+                delta, res, stats, cache_new, worker_evals = got
+                self.trees[i].apply_delta(delta)
+                if self.cache is not None and cache_new is not None:
+                    self.cache.terminal.update(cache_new[0])
+                    self.cache.partial.update(cache_new[1])
+                    if stats is not None:
+                        self.cache.hits += stats[0]
+                        self.cache.misses += stats[1]
+                if base_evals is not None and worker_evals is not None:
+                    sent = self._sent_evals[i]
+                    if sent < 0:  # master counter at submit is the baseline
+                        sent = base_evals
+                    self._extra_evals += max(worker_evals - sent, 0)
+                    self._sent_evals[i] = -1
+                results.append(res)
+                continue
+            tree, res, stats = got
             if base_evals is not None:
                 sent = self._sent_evals[i]
                 if sent < 0:  # was reattached: baseline is the master counter
@@ -266,7 +342,7 @@ class MCTSEnsembleBackend:
 
     algo: str = "mcts"
     config: MCTSConfig = field(default_factory=MCTSConfig)
-    engine: str = "reference"
+    engine: str = "array"
     name: str = "mcts"
 
     def run(
@@ -280,6 +356,7 @@ class MCTSEnsembleBackend:
         n_greedy: int = 1,
         parallel: bool = False,
         cache: Optional[bool] = None,
+        batch: Optional[bool] = None,
         **_,
     ) -> TuneResult:
         mc = dataclasses.replace(self.config, seed=seed)
@@ -296,6 +373,7 @@ class MCTSEnsembleBackend:
             seed=seed,
             engine=self.engine,
             cache=cache,
+            batch=batch,
         )
         res = tuner.run(time_budget_s=time_budget_s)
         res.algo = self.algo

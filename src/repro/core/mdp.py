@@ -43,3 +43,26 @@ class ScheduleMDP:
         if self.is_terminal(state):
             return self.terminal_cost(state)
         return self.cost_model.partial_cost(state, self.space)
+
+    # -- batched pricing (values identical to the scalar methods) ----------
+    def terminal_cost_batch(self, states: Sequence[State]) -> list:
+        """``[terminal_cost(s) for s in states]`` in one cost-model call.
+        Routes through ``cost_model.cost_batch`` when available (duplicate
+        states are then priced once); falls back to the scalar loop."""
+        batch = getattr(self.cost_model, "cost_batch", None)
+        if batch is None:
+            return [self.terminal_cost(s) for s in states]
+        return batch([self.plan(s) for s in states])
+
+    def partial_cost_batch(self, states: Sequence[State]) -> list:
+        """``[partial_cost(s) for s in states]`` in one cost-model call
+        (terminal states price as terminal, like the scalar method)."""
+        batch = getattr(self.cost_model, "cost_batch", None)
+        if batch is None:
+            return [self.partial_cost(s) for s in states]
+        defaults = self.space.default_actions()
+        plans = [
+            self.space.plan_from_actions(list(s) + defaults[len(s):])
+            for s in states
+        ]
+        return batch(plans)

@@ -1,0 +1,146 @@
+"""Differential-testing harness: certifies the array engine everywhere.
+
+Runs the ``reference`` Node-tree MCTS against ``ArrayMCTS`` in BOTH its
+modes — scalar (one-at-a-time leaf evaluation, ``run_decision``) and
+batched (lockstep pending-leaf rounds, ``run_decision_batch``) — over the
+full configuration grid:
+
+    UCB variant (paper | cp10 | sqrt2)
+  × simulation policy (random | greedy)
+  × reward mode (cost | binary)
+  × 3 seeds
+  × 2 model configs (a train MoE cell and a decode cell)
+
+and asserts byte-identical trajectories: the same decision sequence, the
+same per-decision best costs, and the same final best schedule.  This is
+the parity coverage required before ``engine="array"`` became the default
+in ``autotune`` / ``benchmarks.common.run_algo`` — any float drift, RNG
+reordering, or tie-break change in the array engine fails loudly here.
+
+All engines in one cell share a single ``CachedMDP``.  The cache is a pure
+memo (identical values cached or not), so it cannot mask a divergence — it
+only deduplicates pricing across the grid's hundreds of trajectories,
+keeping the harness inside the tier-1 budget.
+"""
+import pytest
+
+from repro.configs import get_config, get_shape
+from repro.core.autotuner import autotune
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.engine import ArrayMCTS, CachedMDP
+from repro.core.engine.batch import run_decision_batch
+from repro.core.ensemble import ProTuner
+from repro.core.mcts import MCTS, MCTSConfig
+from repro.core.mdp import ScheduleMDP
+from repro.core.space import SINGLE_POD, ScheduleSpace
+
+CELLS = {
+    "moe_train": ("granite-moe-1b-a400m", "train_4k"),
+    "decode": ("granite-3-2b", "decode_32k"),
+}
+
+_SHARED = {}
+
+
+def _mdp(cell: str) -> CachedMDP:
+    """One shared (cached) MDP per cell for the whole module."""
+    if cell not in _SHARED:
+        arch, shape_name = CELLS[cell]
+        cfg = get_config(arch).reduced()
+        shape = get_shape(shape_name)
+        space = ScheduleSpace(cfg, shape, SINGLE_POD)
+        _SHARED[cell] = CachedMDP(
+            ScheduleMDP(space, AnalyticCostModel(cfg, shape, SINGLE_POD))
+        )
+    return _SHARED[cell]
+
+
+def _drive(tree, batched: bool = False, mdp=None):
+    """Full tuning trajectory with one tree: every decision round, with
+    tree reuse across rounds.  Returns everything an engine can diverge
+    on."""
+    actions, costs = [], []
+    while not tree.done:
+        if batched:
+            res = run_decision_batch([tree], mdp)[0]
+        else:
+            res = tree.run_decision()
+        actions.append(res.action)
+        costs.append(res.best_cost)
+        tree.advance_root(res.action)
+    return actions, costs, tree.global_best, tree.global_best_state
+
+
+# ---------------------------------------------------------------------------
+# The grid
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cell", list(CELLS))
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("reward", ["cost", "binary"])
+@pytest.mark.parametrize("simulation", ["random", "greedy"])
+@pytest.mark.parametrize("ucb", ["paper", "cp10", "sqrt2"])
+def test_engines_identical_across_grid(ucb, simulation, reward, seed, cell):
+    mdp = _mdp(cell)
+    cfg = MCTSConfig(
+        ucb=ucb,
+        simulation=simulation,
+        reward_mode=reward,
+        iters_per_decision=8,
+        seed=seed,
+    )
+    ref = _drive(MCTS(mdp, cfg))
+    arr = _drive(ArrayMCTS(mdp, cfg))
+    bat = _drive(ArrayMCTS(mdp, cfg), batched=True, mdp=mdp)
+    assert arr == ref, "scalar array engine diverged from reference"
+    assert bat == ref, "batched array engine diverged from reference"
+
+
+# ---------------------------------------------------------------------------
+# Ensemble level: the full ProTuner loop (root synchronization, winner
+# selection, tree reuse) across all three engine modes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cell", list(CELLS))
+def test_ensemble_identical_across_engines(cell):
+    def run(**kw):
+        res = ProTuner(
+            _mdp(cell),
+            n_standard=2,
+            n_greedy=1,
+            mcts_config=MCTSConfig(iters_per_decision=10),
+            seed=3,
+            **kw,
+        ).run()
+        return (
+            res.plan,
+            res.cost,
+            [d["action"] for d in res.decisions],
+            [d["best_cost"] for d in res.decisions],
+            [d["winner_tree"] for d in res.decisions],
+        )
+
+    ref = run(engine="reference", cache=False)
+    arr = run(engine="array", batch=False)
+    bat = run(engine="array", batch=True)
+    assert arr == ref
+    assert bat == ref
+
+
+# ---------------------------------------------------------------------------
+# Default flip: with the grid green, the array engine is the default
+# ---------------------------------------------------------------------------
+def test_array_engine_is_the_default():
+    res = autotune(
+        "granite-moe-1b-a400m", "train_4k", algo="mcts_1s", seed=0,
+        n_standard=2, n_greedy=1,
+    )
+    assert res.engine == "array"
+    assert res.cache_hits > 0  # shared transposition cache on by default
+
+    tuner = ProTuner(_mdp("decode"), n_standard=1, n_greedy=0)
+    assert tuner.engine == "array" and tuner.batch and tuner.cache is not None
+
+    from benchmarks.common import run_algo
+
+    res2, _ = run_algo("granite-moe-1b-a400m", "train_4k", "mcts_1s", seed=0,
+                       n_standard=2, n_greedy=1)
+    assert res2.engine == "array"

@@ -79,6 +79,111 @@ def test_array_engine_via_make_tree_and_autotune():
 
 
 # ---------------------------------------------------------------------------
+# Batched leaf evaluation (lockstep pending-leaf rounds)
+# ---------------------------------------------------------------------------
+def test_batched_round_counts_each_evaluation_once():
+    """Two identical-seed trees put the SAME pending leaf in every lockstep
+    batch; the duplicate must be priced once — evaluation and cache
+    counters must match the scalar one-at-a-time accounting exactly (no
+    double count when a leaf is both expanded and simulated in the same
+    batch by different trees)."""
+    from repro.core.engine.batch import run_decision_batch
+
+    cfg = MCTSConfig(iters_per_decision=16, seed=4)
+    m_bat = CachedMDP(_mdp())
+    res_bat = run_decision_batch(
+        [ArrayMCTS(m_bat, cfg), ArrayMCTS(m_bat, cfg)], m_bat
+    )
+    m_seq = CachedMDP(_mdp())
+    res_seq = [t.run_decision() for t in
+               (ArrayMCTS(m_seq, cfg), ArrayMCTS(m_seq, cfg))]
+    key = lambda r: (r.action, r.best_cost, r.best_state, r.iterations)
+    assert [key(r) for r in res_bat] == [key(r) for r in res_seq]
+    assert key(res_bat[0]) == key(res_bat[1])  # twins stayed in lockstep
+    # each unique schedule priced exactly once, batched or not
+    assert m_bat.mdp.cost_model.n_evals == m_bat.cache.misses
+    assert m_bat.cache.misses == m_seq.cache.misses
+    assert m_bat.cache.hits == m_seq.cache.hits
+    assert m_bat.mdp.cost_model.n_evals == m_seq.mdp.cost_model.n_evals
+
+
+def test_run_decision_counters_survive_batched_ensemble():
+    """`n_evals` through a whole batched ensemble equals the unique misses
+    the shared cache recorded — each batched evaluation counted once."""
+    cfg = MCTSConfig(iters_per_decision=12)
+    res = ProTuner(_mdp(), n_standard=3, n_greedy=1, mcts_config=cfg,
+                   seed=2, engine="array", batch=True).run()
+    assert res.n_evals == res.cache_misses
+    res_scalar = ProTuner(_mdp(), n_standard=3, n_greedy=1, mcts_config=cfg,
+                          seed=2, engine="array", batch=False).run()
+    assert res.plan == res_scalar.plan and res.cost == res_scalar.cost
+    assert res.n_evals == res_scalar.n_evals
+    assert (res.cache_hits, res.cache_misses) == (
+        res_scalar.cache_hits, res_scalar.cache_misses
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-round tree deltas (process-pool transport)
+# ---------------------------------------------------------------------------
+def test_parallel_delta_merge_equals_whole_tree():
+    """The master tree with a worker's round delta applied must equal the
+    worker's post-round tree — the whole-tree-pickle result — field for
+    field, and continue identically afterwards."""
+    import pickle
+
+    import numpy as np
+
+    mdp = CachedMDP(_mdp())
+    master = ArrayMCTS(mdp, MCTSConfig(iters_per_decision=24, seed=6))
+    for _ in range(2):  # grow a real subtree before the measured round
+        r = master.run_decision()
+        master.advance_root(r.action)
+    worker = pickle.loads(pickle.dumps(master))  # ship to the worker
+    worker.begin_delta()
+    res_w = worker.run_decision()
+    wire = pickle.dumps(worker.collect_delta())
+    master.apply_delta(pickle.loads(wire))  # return trip
+
+    assert master.size == worker.size
+    n = master.size
+    for name in ("visit_counts", "sum_cost", "sum_reward", "best_cost",
+                 "node_action", "n_children"):
+        np.testing.assert_array_equal(
+            getattr(master, name)[:n], getattr(worker, name)[:n], err_msg=name
+        )
+    w = worker.children.shape[1]
+    np.testing.assert_array_equal(master.children[:n, :w], worker.children[:n, :w])
+    assert master.untried == worker.untried
+    assert master._childlist == worker._childlist
+    assert master.best_state == worker.best_state
+    assert master.rng.getstate() == worker.rng.getstate()
+    assert (master.baseline, master.global_best, master.global_best_state) == (
+        worker.baseline, worker.global_best, worker.global_best_state
+    )
+    # the delta payload is what crosses the pool boundary — it must be
+    # smaller than the whole-tree pickle it replaces
+    assert len(wire) < len(pickle.dumps(worker))
+    # merged tree and whole-tree result keep evolving identically
+    r_m, r_w = master.run_decision(), worker.run_decision()
+    assert (r_m.action, r_m.best_cost, r_m.best_state) == (
+        r_w.action, r_w.best_cost, r_w.best_state
+    )
+
+
+def test_delta_rejects_mismatched_base():
+    mdp = CachedMDP(_mdp())
+    a = ArrayMCTS(mdp, MCTSConfig(iters_per_decision=8, seed=1))
+    b = ArrayMCTS(mdp, MCTSConfig(iters_per_decision=8, seed=1))
+    a.run_decision()  # a grew past b's size
+    b.begin_delta()
+    b.run_decision()
+    delta = b.collect_delta()
+    with pytest.raises(ValueError):
+        a.apply_delta(delta)
+
+
+# ---------------------------------------------------------------------------
 # Transposition cache
 # ---------------------------------------------------------------------------
 def test_cache_returns_bit_identical_costs():

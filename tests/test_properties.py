@@ -16,6 +16,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.configs import ARCH_IDS, get_config, get_shape
 from repro.core.autotuner import NoisyCostModel, make_mdp
 from repro.core.cost_model import AnalyticCostModel
+from repro.core.engine import CachedMDP
 from repro.core.mcts import MCTS, MCTSConfig
 from repro.core.space import SINGLE_POD, MULTI_POD, SchedulePlan, ScheduleSpace
 from repro.kernels import ref
@@ -55,6 +56,99 @@ def test_action_sequences_roundtrip(c, seed):
     for s, a in zip(space.stages, actions):
         assert getattr(plan, s.name) == s.options[a]
     assert SchedulePlan.from_dict(plan.to_dict()) == plan
+
+
+@st.composite
+def plan_batch(draw):
+    """A (space, model, plans) triple with arbitrary plans — duplicates
+    injected deliberately, since concurrent rollouts collide on schedules."""
+    arch = draw(st.sampled_from(["granite-3-2b", "granite-moe-1b-a400m"]))
+    shape_name = draw(st.sampled_from(["train_4k", "decode_32k"]))
+    cfg, shape = get_config(arch).reduced(), get_shape(shape_name)
+    space = ScheduleSpace(cfg, shape, SINGLE_POD)
+    seeds = draw(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=6))
+    plans = [space.random_plan(random.Random(s)) for s in seeds]
+    if draw(st.booleans()):
+        plans = plans + plans[: draw(st.integers(1, len(plans)))]
+    return cfg, shape, space, plans
+
+
+@SETTINGS
+@given(plan_batch())
+def test_cost_batch_equals_scalar_sweep(batch):
+    """The batch-pricing contract: ``cost_batch(plans)`` returns EXACTLY
+    ``[cost(p) for p in plans]`` — element order preserved, duplicates
+    included, floats compared with ``==`` (bit-identity, not tolerance)."""
+    cfg, shape, space, plans = batch
+    cm = AnalyticCostModel(cfg, shape, SINGLE_POD)
+    scalar = [cm.cost(p) for p in plans]
+    batched = cm.cost_batch(plans)
+    assert batched == scalar
+    # a second batched pass (warm context) returns the same values
+    assert cm.cost_batch(plans) == scalar
+    # unique plans are priced once per batch call
+    n0 = cm.n_evals
+    cm.cost_batch(plans)
+    assert cm.n_evals - n0 == len(set(plans))
+
+
+@SETTINGS
+@given(plan_batch(), st.floats(0.05, 0.5), st.integers(0, 10**6))
+def test_noisy_cost_batch_equals_scalar_sweep(batch, sigma, seed):
+    cfg, shape, space, plans = batch
+    noisy = NoisyCostModel(AnalyticCostModel(cfg, shape, SINGLE_POD), sigma, seed)
+    assert noisy.cost_batch(plans) == [noisy.cost(p) for p in plans]
+
+
+@st.composite
+def state_batch(draw):
+    """A (CachedMDP, states) pair; states are complete schedules with
+    duplicates injected."""
+    from repro.core.mdp import ScheduleMDP
+
+    cfg, shape = get_config("granite-moe-1b-a400m").reduced(), get_shape("train_4k")
+    space = ScheduleSpace(cfg, shape, SINGLE_POD)
+    mdp = ScheduleMDP(space, AnalyticCostModel(cfg, shape, SINGLE_POD))
+    seeds = draw(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=6))
+    states = [tuple(space.random_actions(random.Random(s))) for s in seeds]
+    if draw(st.booleans()):
+        states = states + states[: draw(st.integers(1, len(states)))]
+    return CachedMDP(mdp), states
+
+
+@SETTINGS
+@given(state_batch())
+def test_terminal_cost_batch_cache_consistency(batch):
+    """``CachedMDP.terminal_cost_batch``: scalar-identical values, hit/miss
+    accounting sums to the batch size, and a warm cache never changes the
+    returned values (it only converts misses to hits)."""
+    mdp, states = batch
+    cache = mdp.cache
+    cold = mdp.terminal_cost_batch(states)
+    assert cache.hits + cache.misses == len(states)
+    assert cache.misses == len(set(states))  # duplicates hit in-batch
+    warm = mdp.terminal_cost_batch(states)
+    assert warm == cold
+    assert cache.misses == len(set(states))  # warm pass: all hits
+    assert cache.hits + cache.misses == 2 * len(states)
+    # scalar lookups agree element-for-element
+    assert [mdp.terminal_cost(s) for s in states] == cold
+    # the wrapped cost model priced each unique schedule exactly once
+    assert mdp.cost_model.n_evals == len(set(states))
+
+
+@SETTINGS
+@given(state_batch(), st.integers(1, 12))
+def test_partial_cost_batch_cache_consistency(batch, cut):
+    """Mixed prefix/terminal batches through ``partial_cost_batch`` match
+    the scalar method and keep ``hits + misses == len(batch)``."""
+    mdp, states = batch
+    prefixes = [s[: cut % (len(s) + 1)] for s in states]  # some terminal
+    mixed = prefixes + states[:1]
+    cold = mdp.partial_cost_batch(mixed)
+    assert mdp.cache.hits + mdp.cache.misses == len(mixed)
+    assert mdp.partial_cost_batch(mixed) == cold
+    assert [mdp.partial_cost(s) for s in mixed] == cold
 
 
 @SETTINGS

@@ -75,6 +75,7 @@ def run_algo(
     n_standard: int = 15,
     n_greedy: int = 1,
     engine: str = "array",
+    cost: str = "analytic",
 ):
     """One search run under the paper protocol (scaled budgets).
 
@@ -84,7 +85,10 @@ def run_algo(
     engine (batched leaf evaluation + shared transposition cache) by
     default — search results are certified identical to the reference
     engine by ``tests/test_differential.py``; pass ``engine="reference"``
-    for the paper-faithful Node trees."""
+    for the paper-faithful Node trees.  ``cost`` selects the serving layer
+    of the cost stack (``"analytic"`` exact — the default for every
+    published figure — or ``"learned"``/``"hybrid"`` online learned-cost
+    serving; see ``repro.core.engine.serving``)."""
     mdp = make_mdp(arch, shape, noise_sigma=noise_sigma, noise_seed=noise_seed)
     if algo.startswith("mcts"):
         from repro.core.ensemble import ProTuner
@@ -98,13 +102,14 @@ def run_algo(
             measure_fn=measure_fn if "real" in algo else None,
             seed=seed,
             engine=engine,
+            cost=cost,
         )
         res = tuner.run(time_budget_s=time_budget_s)
         res.algo = algo
         return res, mdp
     res = autotune(arch, shape, algo=algo, seed=seed, mdp=mdp,
                    measure_fn=measure_fn, time_budget_s=time_budget_s,
-                   engine=engine)
+                   engine=engine, cost=cost)
     return res, mdp
 
 

@@ -17,10 +17,12 @@ comparison:
 Reported per cell: iterations/sec per leg, cache hits/misses, and two
 speedups — ``speedup`` (batched array vs reference, the end-to-end win)
 and ``speedup_batched_vs_scalar`` (the isolated value of batching leaf
-evaluation over the PR-1 engine; the headline decode cell must clear
-≥1.5x).  ``--check`` exits non-zero if the array engine fails to beat the
-reference on the decode cell or any leg diverges — the CI perf-smoke gate
-that keeps the default flip honest.
+evaluation over the PR-1 engine; ~1.5-1.9x on the decode headline cell at
+Table-1 scale, reported but NOT gated — per-leg ratios are too
+load-sensitive on small CI runners).  ``--check`` enforces exactly two
+things: the array engine beats the reference on the decode cell, and all
+legs produce identical results — the CI perf-smoke gate that keeps the
+default flip honest.
 
     PYTHONPATH=src python -m benchmarks.engine_throughput
     PYTHONPATH=src python -m benchmarks.engine_throughput --quick --check
@@ -65,7 +67,10 @@ def run_ensemble(cell, engine: str, *, iters: int, n_standard: int,
 
 def bench_cell(cell, *, iters: int, n_standard: int, n_greedy: int) -> dict:
     out = {"cell": "x".join(cell), "iters_per_decision": iters,
-           "n_trees": n_standard + n_greedy}
+           "n_trees": n_standard + n_greedy,
+           # the engine that produced the headline (array_*) columns — the
+           # repo default since PR 2; render_experiments.py reports this
+           "engine": "array (batched leaves + shared transposition cache)"}
 
     res_ref, it_ref, wall_ref = run_ensemble(
         cell, "reference", iters=iters, n_standard=n_standard,

@@ -1,0 +1,121 @@
+#!/usr/bin/env python
+"""Docs CI gate: the documentation must actually work.
+
+Two checks over README.md and docs/*.md:
+
+1. **Code fences run.**  Every ```python fence is extracted and executed
+   verbatim in a fresh subprocess from the repo root (PYTHONPATH=src, like
+   the quickstart instructions say).  A fence whose first line contains
+   ``docs: no-run`` is skipped — use that for illustrative sketches.
+2. **Intra-repo links resolve.**  Every markdown link target that is not
+   an URL or a pure anchor must exist on disk, relative to the file (or
+   the repo root as a fallback).
+
+    PYTHONPATH=src python scripts/check_docs.py [--list]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+FENCE_RE = re.compile(r"^```python[^\n]*\n(.*?)^```\s*$", re.M | re.S)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files():
+    out = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        out += sorted(
+            os.path.join(docs, f) for f in os.listdir(docs)
+            if f.endswith(".md")
+        )
+    return out
+
+
+def extract_fences(text):
+    for m in FENCE_RE.finditer(text):
+        code = m.group(1)
+        first = code.lstrip().splitlines()[0] if code.strip() else ""
+        if "docs: no-run" in first:
+            continue
+        yield text[: m.start()].count("\n") + 2, code  # 1-based code start
+
+
+def run_fence(path, line, code, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(ROOT, "src")
+        + (os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code], cwd=ROOT, env=env,
+        capture_output=True, text=True, timeout=timeout,
+    )
+    rel = os.path.relpath(path, ROOT)
+    if proc.returncode != 0:
+        return (f"{rel}:{line}: code fence failed "
+                f"(exit {proc.returncode})\n{proc.stdout}{proc.stderr}")
+    print(f"  ok: {rel}:{line} code fence ran clean")
+    return None
+
+
+def check_links(path, text):
+    errors = []
+    rel = os.path.relpath(path, ROOT)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:
+            continue
+        cand = [
+            os.path.normpath(os.path.join(os.path.dirname(path), target)),
+            os.path.normpath(os.path.join(ROOT, target)),
+        ]
+        if not any(os.path.exists(c) for c in cand):
+            line = text[: m.start()].count("\n") + 1
+            errors.append(f"{rel}:{line}: broken intra-repo link -> {target}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--list", action="store_true",
+                    help="list fences and links without executing")
+    args = ap.parse_args(argv)
+
+    errors = []
+    n_fences = n_links = 0
+    for path in doc_files():
+        with open(path) as f:
+            text = f.read()
+        n_links += len(LINK_RE.findall(text))
+        errors += check_links(path, text)
+        for line, code in extract_fences(text):
+            n_fences += 1
+            if args.list:
+                print(f"{os.path.relpath(path, ROOT)}:{line}: "
+                      f"{len(code.splitlines())}-line fence")
+                continue
+            err = run_fence(path, line, code)
+            if err:
+                errors.append(err)
+
+    print(f"# checked {n_fences} runnable fences, {n_links} links "
+          f"across {len(doc_files())} files")
+    if errors:
+        print("\n".join(f"FAIL: {e}" for e in errors))
+        return 1
+    print("# docs check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

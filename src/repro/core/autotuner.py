@@ -110,6 +110,7 @@ def autotune(
     parallel: bool = False,
     cache: Optional[bool] = None,
     batch: Optional[bool] = None,
+    cost: str = "analytic",
 ) -> TuneResult:
     """Tune one (arch × shape × mesh) cell.
 
@@ -121,7 +122,15 @@ def autotune(
     the shared transposition cache on/off (default: on for the array
     engine); ``batch`` forces lockstep batched leaf evaluation on/off
     (default: on for the array engine).  All algorithms dispatch through
-    the ``SearchBackend`` protocol (``repro.core.engine.backend``)."""
+    the ``SearchBackend`` protocol (``repro.core.engine.backend``).
+
+    ``cost`` selects the serving layer of the cost stack for MCTS runs:
+    ``"analytic"`` (default — exact, bit-identical to the certified PR-2
+    path), ``"learned"`` (serve the online-trained §3 MLP once it exists),
+    or ``"hybrid"`` (serve it only while its holdout Spearman clears the
+    confidence gate; exact-analytic fallback otherwise).  A pre-configured
+    ``HybridCostBackend`` is also accepted.  See
+    ``repro.core.engine.serving`` and ``docs/architecture.md``."""
     assert engine in ENGINES, engine
     mdp = mdp or make_mdp(arch, shape_name, mesh, noise_sigma, seed)
     backend: SearchBackend = resolve_backend(algo, engine=engine)
@@ -135,5 +144,6 @@ def autotune(
         parallel=parallel,
         cache=cache,
         batch=batch,
+        cost=cost,
     )
     return res

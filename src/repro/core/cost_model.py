@@ -1,12 +1,22 @@
-"""Analytic roofline cost model for complete TPU schedules.
+"""Analytic roofline cost model for complete TPU schedules — the EXACT
+layer of the three-layer cost stack (see docs/architecture.md):
 
-Plays the role of the paper's learned cost model: fast (≈100 µs/plan),
-structurally informed, and — by construction — imperfect relative to the
-compile-based "real measurement" (core/measure.py derives the same three
-roofline terms from the actual XLA HLO).  The search compares plans by the
-estimated step time; infeasible plans (HBM over capacity) get a large but
-finite multiplicative penalty so the search sees a continuous landscape,
-mirroring Halide schedules that compile but run slowly.
+1. **analytic** (this module) — deterministic roofline arithmetic,
+   ≈100 µs/plan, the search's default signal and the online trainer's
+   ground truth;
+2. **learned** (core/learned_cost.py + core/engine/serving.py) — the §3
+   MLP, refit online on transposition-cache contents and served on
+   cache-miss batches in one jitted forward pass;
+3. **real measurement** (core/measure.py) — subprocess XLA compiles,
+   re-ranking candidates at root synchronizations (``mcts_cost+real_*``).
+
+Plays the role of the paper's learned cost model in most experiments:
+fast, structurally informed, and — by construction — imperfect relative to
+the compile-based "real measurement" (core/measure.py derives the same
+three roofline terms from the actual XLA HLO).  The search compares plans
+by the estimated step time; infeasible plans (HBM over capacity) get a
+large but finite multiplicative penalty so the search sees a continuous
+landscape, mirroring Halide schedules that compile but run slowly.
 
 All byte/FLOP accounting is per *training/serving step* on the whole mesh;
 terms are per the assignment's formulas:

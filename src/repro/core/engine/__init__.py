@@ -35,11 +35,26 @@ Plus the shared ``TranspositionCache`` / ``CachedMDP`` that memoizes
 ``terminal_cost`` / ``partial_cost`` across all ensemble trees and all
 decision rounds, and the ``SearchBackend`` protocol (see ``backend.py``)
 that ``autotune`` routes every algorithm through.
+
+Learned-cost serving (``serving.py``): ``cost="analytic"|"learned"|"hybrid"``
+on ``autotune`` / ``ProTuner`` / ``resolve_backend`` mounts a
+``HybridCostBackend`` inside ``CachedMDP`` — an ``OnlineCostTrainer``
+refits the §3 MLP on the cache's analytic terminal entries, and trained
+(confident) models price each deduplicated miss batch in ONE jitted
+forward pass, with exact-analytic fallback.  ``cost="analytic"`` (the
+default) mounts nothing, so the differential-certified PR-2 path is
+untouched.  See ``docs/architecture.md`` for the full seam contracts.
 """
 from __future__ import annotations
 
 from repro.core.engine.array_mcts import ArrayMCTS
 from repro.core.engine.cache import CachedMDP, TranspositionCache
+from repro.core.engine.serving import (
+    COST_MODES,
+    HybridCostBackend,
+    OnlineCostTrainer,
+    make_cost_backend,
+)
 
 ENGINES = ("reference", "array")
 
@@ -59,6 +74,10 @@ __all__ = [
     "ArrayMCTS",
     "CachedMDP",
     "TranspositionCache",
+    "COST_MODES",
+    "HybridCostBackend",
+    "OnlineCostTrainer",
+    "make_cost_backend",
     "ENGINES",
     "make_tree",
 ]

@@ -8,11 +8,14 @@ A backend is anything with a ``name`` and
     run(mdp, *, seed=0, time_budget_s=None, measure_fn=None, **opts)
         -> TuneResult
 
-``resolve_backend(algo, engine=...)`` maps the paper's Table-1 algorithm
-names to configured backend instances; ``engine`` selects the MCTS tree
-representation — ``"array"`` flat numpy with batched leaf evaluation (the
-default, differential-tested against the reference) or ``"reference"``
-Node objects.
+``resolve_backend(algo, engine=..., cost=...)`` maps the paper's Table-1
+algorithm names to configured backend instances; ``engine`` selects the
+MCTS tree representation — ``"array"`` flat numpy with batched leaf
+evaluation (the default, differential-tested against the reference) or
+``"reference"`` Node objects — and ``cost`` selects the serving layer of
+the cost stack (``"analytic"`` exact, ``"learned"``/``"hybrid"`` online
+learned-cost serving behind the transposition cache; see
+``repro.core.engine.serving``).
 """
 from __future__ import annotations
 
@@ -54,8 +57,14 @@ TABLE1 = {
 }
 
 
-def resolve_backend(algo: str, engine: str = "array") -> SearchBackend:
-    """Map an algorithm name (paper §5 protocol) to a configured backend."""
+def resolve_backend(
+    algo: str, engine: str = "array", cost: str = "analytic"
+) -> SearchBackend:
+    """Map an algorithm name (paper §5 protocol) to a configured backend.
+
+    ``cost`` configures MCTS backends' learned-cost serving mode; the
+    non-model-based baselines (beam/greedy/random) ignore it — they price
+    straight through the analytic model, as in the paper."""
     # imported here: beam/random/ensemble all define backends and import
     # TuneResult from ensemble, which imports this package
     from repro.core.beam import BeamBackend, GreedyBackend
@@ -73,6 +82,7 @@ def resolve_backend(algo: str, engine: str = "array") -> SearchBackend:
             algo=algo,
             config=TABLE1.get(algo, TABLE1["mcts_30s"]),
             engine=engine,
+            cost=cost,
             name="mcts",
         )
     raise ValueError(f"unknown algo {algo!r}")

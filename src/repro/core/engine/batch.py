@@ -297,4 +297,10 @@ def run_decision_batch(
             extra = 1
         c.flush()
         out.append(c.t._root_decision(iters + extra))
+    # learned-cost serving (engine/serving.py): a decision-round boundary
+    # is the online trainer's deterministic refit point — the next round's
+    # miss batches are then priced by the refreshed model
+    round_end = getattr(mdp, "on_round_end", None)
+    if round_end is not None:
+        round_end()
     return out

@@ -10,9 +10,20 @@ decision rounds revisits the same subtree terminals round after round.
 and all rounds; ``CachedMDP`` is a drop-in ``ScheduleMDP`` wrapper so every
 search backend (MCTS, ArrayMCTS, beam, random) gets the cache for free.
 
-Values are bit-identical to uncached evaluation (it is a pure memo — no
-rounding, no eviction), so search trajectories are unchanged; only the
-number of cost-model evaluations drops.
+With no cost backend mounted (the default), values are bit-identical to
+uncached evaluation (a pure memo — no rounding, no eviction), so search
+trajectories are unchanged; only the number of cost-model evaluations
+drops.
+
+Learned-cost serving (``repro.core.engine.serving``): a
+``HybridCostBackend`` passed as ``cost_backend=`` takes over miss pricing —
+a deduplicated miss batch is priced by one learned-model forward pass when
+the model is trained (and confident), by the exact analytic path otherwise.
+Entries the model priced carry its fit-generation id in
+``terminal_version`` / ``partial_version``; absence of a tag ALWAYS means
+exact analytic pricing, which is what the online trainer harvests (the
+model never trains on its own predictions) and what keeps merged
+multi-process caches interpretable.
 """
 from __future__ import annotations
 
@@ -23,13 +34,21 @@ State = Tuple[int, ...]
 
 class TranspositionCache:
     """Memo of {complete action tuple -> terminal cost} and
-    {prefix action tuple -> default-completed partial cost}."""
+    {prefix action tuple -> default-completed partial cost}, plus
+    per-entry model-version tags for learned-priced entries."""
 
-    __slots__ = ("terminal", "partial", "hits", "misses")
+    __slots__ = (
+        "terminal", "partial", "terminal_version", "partial_version",
+        "hits", "misses",
+    )
 
     def __init__(self):
         self.terminal: Dict[State, float] = {}
         self.partial: Dict[State, float] = {}
+        # model-version tags, ONLY for learned-priced entries: absence of a
+        # key means the entry is exact analytic (version 0)
+        self.terminal_version: Dict[State, int] = {}
+        self.partial_version: Dict[State, int] = {}
         self.hits = 0
         self.misses = 0
 
@@ -50,6 +69,8 @@ class TranspositionCache:
             "hit_rate": self.hit_rate,
             "terminal_entries": len(self.terminal),
             "partial_entries": len(self.partial),
+            "learned_terminal_entries": len(self.terminal_version),
+            "learned_partial_entries": len(self.partial_version),
         }
 
     # -- multiprocess merge --------------------------------------------
@@ -57,19 +78,54 @@ class TranspositionCache:
         # Workers receive the mappings but fresh counters, so the counts a
         # worker reports back are exactly the activity of its round and
         # ``merge`` can sum them without double counting.
-        return {"terminal": self.terminal, "partial": self.partial}
+        return {
+            "terminal": self.terminal,
+            "partial": self.partial,
+            "terminal_version": self.terminal_version,
+            "partial_version": self.partial_version,
+        }
 
     def __setstate__(self, state):
         self.terminal = state["terminal"]
         self.partial = state["partial"]
+        self.terminal_version = state.get("terminal_version", {})
+        self.partial_version = state.get("partial_version", {})
         self.hits = 0
         self.misses = 0
 
+    @staticmethod
+    def _merge_tbl(tbl, vtbl, new, vnew) -> None:
+        """Fold ``new`` entries (with tags ``vnew``) into ``tbl``/``vtbl``
+        under the EXACT-WINS rule: an existing untagged (exact analytic)
+        entry is never overwritten by a learned prediction, and an
+        incoming exact entry replaces a learned one and clears its tag.
+        Sibling workers can race on the same state — one serving the
+        model, one auditing analytically — and exact must win regardless
+        of merge order.  (Two *predictions* of the same state from
+        different model generations resolve last-writer-wins; callers
+        merge in tree-index order, so that too is deterministic.)"""
+        if not vtbl and not vnew:
+            tbl.update(new)  # pure-analytic fast path: everything is exact
+            return
+        for s, c in new.items():
+            if s in tbl and s not in vtbl:
+                continue  # existing exact entry wins
+            tbl[s] = c
+            v = vnew.get(s)
+            if v is None:
+                vtbl.pop(s, None)  # incoming exact clears any stale tag
+            else:
+                vtbl[s] = v
+
     def merge(self, other: "TranspositionCache") -> None:
-        """Fold a worker-side cache back into this one (deterministic: keys
-        map to identical values everywhere, so update order is irrelevant)."""
-        self.terminal.update(other.terminal)
-        self.partial.update(other.partial)
+        """Fold a worker-side cache back into this one.  With no learned
+        entries anywhere, keys map to identical (exact) values in every
+        worker, so this is a plain order-independent update; learned
+        entries merge under the exact-wins rule (``_merge_tbl``)."""
+        self._merge_tbl(self.terminal, self.terminal_version,
+                        other.terminal, other.terminal_version)
+        self._merge_tbl(self.partial, self.partial_version,
+                        other.partial, other.partial_version)
         self.hits += other.hits
         self.misses += other.misses
 
@@ -78,11 +134,19 @@ class CachedMDP:
     """``ScheduleMDP`` wrapper memoizing ``terminal_cost``/``partial_cost``.
 
     Everything else delegates to the wrapped MDP, so this nests around any
-    object implementing the MDP protocol (including test doubles)."""
+    object implementing the MDP protocol (including test doubles).
 
-    def __init__(self, mdp, cache: TranspositionCache = None):
+    ``cost_backend`` (optional, a ``HybridCostBackend``) reroutes MISS
+    pricing through the learned-cost serving layer; hit/miss bookkeeping,
+    deduplication, and the batch contract below are unchanged."""
+
+    def __init__(self, mdp, cache: TranspositionCache = None,
+                 cost_backend=None):
         self.mdp = mdp
         self.cache = cache if cache is not None else TranspositionCache()
+        self.cost_backend = cost_backend
+        if cost_backend is not None:
+            cost_backend.bind(self.cache)
 
     # -- pure structure: straight delegation ---------------------------
     @property
@@ -117,7 +181,13 @@ class CachedMDP:
             self.cache.hits += 1
             return c
         self.cache.misses += 1
-        c = self.mdp.terminal_cost(state)
+        if self.cost_backend is not None:
+            costs, ver = self.cost_backend.price_terminal(self.mdp, [state])
+            c = costs[0]
+            if ver:
+                self.cache.terminal_version[state] = ver
+        else:
+            c = self.mdp.terminal_cost(state)
         tbl[state] = c
         return c
 
@@ -130,19 +200,28 @@ class CachedMDP:
             self.cache.hits += 1
             return c
         self.cache.misses += 1
-        c = self.mdp.partial_cost(state)
+        if self.cost_backend is not None:
+            costs, ver = self.cost_backend.price_partial(self.mdp, [state])
+            c = costs[0]
+            if ver:
+                self.cache.partial_version[state] = ver
+        else:
+            c = self.mdp.partial_cost(state)
         tbl[state] = c
         return c
 
     # -- batched cost signals ------------------------------------------
     # Contract (shared by both methods): values equal the scalar methods
     # element-for-element; hits + misses advance by exactly len(states);
-    # only MISSES reach the wrapped MDP, deduplicated, in first-occurrence
+    # only MISSES reach the pricing layer, deduplicated, in first-occurrence
     # order — a state appearing twice in one batch is one miss plus one
     # hit, exactly as if the batch had been priced sequentially.  A warm
     # cache therefore never changes returned values, only the hit count.
+    # With a cost backend mounted, the pricing layer is the backend (one
+    # learned forward pass or one analytic cost_batch per miss batch) and
+    # newly priced entries carry the serving model's version tag.
 
-    def _batch(self, states, tbl, price) -> List[float]:
+    def _batch(self, states, tbl, vtbl, price) -> List[float]:
         out: List[Optional[float]] = [None] * len(states)
         pending: Dict[State, None] = {}  # dedup, insertion-ordered
         hits = 0
@@ -159,18 +238,37 @@ class CachedMDP:
         self.cache.misses += len(pending)
         if pending:
             miss_states = list(pending)
-            for s, c in zip(miss_states, price(miss_states)):
+            costs, ver = price(miss_states)
+            for s, c in zip(miss_states, costs):
                 tbl[s] = c
+                if ver:
+                    vtbl[s] = ver
             for i, s in enumerate(states):
                 if out[i] is None:
                     out[i] = tbl[s]
         return out
 
+    def _terminal_price(self):
+        if self.cost_backend is not None:
+            return lambda miss: self.cost_backend.price_terminal(self.mdp, miss)
+        inner = getattr(self.mdp, "terminal_cost_batch", None)
+        if inner is None:
+            return lambda miss: ([self.mdp.terminal_cost(s) for s in miss], 0)
+        return lambda miss: (inner(miss), 0)
+
+    def _partial_price(self):
+        if self.cost_backend is not None:
+            return lambda miss: self.cost_backend.price_partial(self.mdp, miss)
+        inner = getattr(self.mdp, "partial_cost_batch", None)
+        if inner is None:
+            return lambda miss: ([self.mdp.partial_cost(s) for s in miss], 0)
+        return lambda miss: (inner(miss), 0)
+
     def terminal_cost_batch(self, states: Sequence[State]) -> List[float]:
-        price = getattr(self.mdp, "terminal_cost_batch", None)
-        if price is None:
-            price = lambda miss: [self.mdp.terminal_cost(s) for s in miss]
-        return self._batch(states, self.cache.terminal, price)
+        return self._batch(
+            states, self.cache.terminal, self.cache.terminal_version,
+            self._terminal_price(),
+        )
 
     def partial_cost_batch(self, states: Sequence[State]) -> List[float]:
         """Mixed batches allowed: terminal states route to the terminal
@@ -178,10 +276,10 @@ class CachedMDP:
         is_terminal = self.mdp.is_terminal
         term_idx = [i for i, s in enumerate(states) if is_terminal(s)]
         if not term_idx:
-            price = getattr(self.mdp, "partial_cost_batch", None)
-            if price is None:
-                price = lambda miss: [self.mdp.partial_cost(s) for s in miss]
-            return self._batch(states, self.cache.partial, price)
+            return self._batch(
+                states, self.cache.partial, self.cache.partial_version,
+                self._partial_price(),
+            )
         term_set = set(term_idx)
         part_idx = [i for i in range(len(states)) if i not in term_set]
         out: List[Optional[float]] = [None] * len(states)
@@ -192,6 +290,14 @@ class CachedMDP:
                         self.partial_cost_batch([states[i] for i in part_idx])):
             out[i] = c
         return out
+
+    # -- serving hooks --------------------------------------------------
+    def on_round_end(self) -> None:
+        """Round-boundary hook (lockstep batched rounds, parallel merges):
+        gives the online trainer a deterministic refit point even when no
+        miss batch crosses the refit threshold mid-round."""
+        if self.cost_backend is not None:
+            self.cost_backend.maybe_refit()
 
     def __getattr__(self, name):
         # fall through for any extension attribute on the wrapped MDP;

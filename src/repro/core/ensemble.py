@@ -30,6 +30,16 @@ the sequential path for a fixed seed; the ``n_evals``/``cache_*`` counters
 can differ slightly when the cache is on, because workers run against
 round-start cache snapshots and may re-evaluate states a sibling priced in
 the same round.
+
+Cost serving layer: ``cost="learned"|"hybrid"`` mounts a
+``HybridCostBackend`` (``engine/serving.py``) inside the shared
+``CachedMDP`` — the online trainer refits the §3 MLP on the cache's
+analytic terminal entries at round boundaries, and the trained (confident)
+model prices each miss batch in one jitted forward pass.  In parallel mode
+workers serve but never refit (pickled backends are serve-only); the
+master refits on the merged cache after each round and ships the new model
+with the next round's submissions.  ``cost="analytic"`` (the default)
+mounts nothing and stays bit-identical to the certified PR-2 path.
 """
 from __future__ import annotations
 
@@ -42,7 +52,12 @@ from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.core.engine import CachedMDP, TranspositionCache, make_tree
+from repro.core.engine import (
+    CachedMDP,
+    TranspositionCache,
+    make_cost_backend,
+    make_tree,
+)
 from repro.core.engine.array_mcts import ArrayMCTS
 from repro.core.engine.batch import run_decision_batch
 from repro.core.mcts import MCTSConfig
@@ -55,7 +70,7 @@ INF = float("inf")
 @dataclass
 class TuneResult:
     plan: SchedulePlan
-    cost: float  # cost-model cost of the final schedule
+    cost: float  # EXACT analytic cost of the final schedule (all cost modes)
     measured: Optional[float]  # real-measured step time (if measuring)
     n_evals: int  # cost-model evaluations
     n_measurements: int
@@ -65,6 +80,11 @@ class TuneResult:
     engine: str = "reference"
     cache_hits: int = 0
     cache_misses: int = 0
+    # learned-cost serving (engine/serving.py); analytic runs keep defaults
+    cost_mode: str = "analytic"
+    model_version: int = 0  # serving model's fit generation at run end
+    n_fits: int = 0
+    learned_evals: int = 0  # plans priced by the learned model
 
     def to_dict(self):
         d = dataclasses.asdict(self)
@@ -78,12 +98,15 @@ def _tree_decision(tree):
     the round.  Cache counters travel as plain ints —
     ``TranspositionCache.__getstate__`` zeroes them on every pickle, so the
     worker's counts are exactly this round's activity but would be lost on
-    the return trip otherwise."""
+    the return trip otherwise.  Serving-backend pricing counters travel the
+    same way (``HybridCostBackend.__getstate__`` zeroes them)."""
     res = tree.run_decision()
-    stats = None
+    stats = serving = None
     if isinstance(tree.mdp, CachedMDP):
         stats = (tree.mdp.cache.hits, tree.mdp.cache.misses)
-    return tree, res, stats
+        if tree.mdp.cost_backend is not None:
+            serving = tree.mdp.cost_backend.counters()
+    return tree, res, stats, serving
 
 
 def _tree_decision_delta(tree):
@@ -93,23 +116,36 @@ def _tree_decision_delta(tree):
     pool lose to sequential below ~4 cores).  New cache entries ship as
     plain dict slices: entries are append-only and insertion-ordered, so
     everything past the round-start lengths is exactly this round's
-    additions."""
+    additions.  Model-version tags for learned-priced entries ship the
+    same way (a worker backend serves but never refits, so every tag it
+    writes names the model version the master shipped it — merged caches
+    stay interpretable)."""
     cached = isinstance(tree.mdp, CachedMDP)
     if cached:
         cache = tree.mdp.cache
         base_t, base_p = len(cache.terminal), len(cache.partial)
+        base_tv = len(cache.terminal_version)
+        base_pv = len(cache.partial_version)
     tree.begin_delta()
     res = tree.run_decision()
     delta = tree.collect_delta()
-    stats = cache_new = None
+    stats = cache_new = serving = None
     if cached:
         stats = (cache.hits, cache.misses)
         cache_new = (
             dict(itertools.islice(cache.terminal.items(), base_t, None)),
             dict(itertools.islice(cache.partial.items(), base_p, None)),
+            dict(itertools.islice(
+                cache.terminal_version.items(), base_tv, None)),
+            dict(itertools.islice(
+                cache.partial_version.items(), base_pv, None)),
         )
+        if tree.mdp.cost_backend is not None:
+            # pricing counters were zeroed at pickle time, so these are
+            # exactly this round's serving activity
+            serving = tree.mdp.cost_backend.counters()
     n_evals = getattr(tree.mdp.cost_model, "n_evals", None)
-    return delta, res, stats, cache_new, n_evals
+    return delta, res, stats, cache_new, n_evals, serving
 
 
 class ProTuner:
@@ -126,17 +162,42 @@ class ProTuner:
         engine: str = "array",
         cache: Optional[bool] = None,
         batch: Optional[bool] = None,
+        cost: str = "analytic",
     ):
         self.measure_fn = measure_fn
         self.parallel = parallel
         self.engine = engine
+        # learned-cost serving: cost="learned"|"hybrid" (or a ready-made
+        # HybridCostBackend) mounts the serving layer inside CachedMDP;
+        # "analytic" mounts nothing — the PR-2 bit-identical path.  A
+        # backend already mounted on a passed-in CachedMDP wins whatever
+        # ``cost`` says: it IS pricing misses, so reporting/exact-repricing
+        # must see it.
+        if isinstance(mdp, CachedMDP) and mdp.cost_backend is not None:
+            backend = mdp.cost_backend  # mounted backend wins over cost=
+        else:
+            backend = make_cost_backend(cost, mdp.space)
+        self.cost_backend = backend
+        self.cost_mode = backend.mode if backend is not None else "analytic"
         if cache is None:
-            cache = engine == "array"
+            # the cache is the serving seam AND the training set, so a
+            # cost backend turns it on for any engine
+            cache = engine == "array" or backend is not None
         if batch is None:
             batch = engine == "array"
         self.batch = batch
-        if cache and not isinstance(mdp, CachedMDP):
-            mdp = CachedMDP(mdp)
+        if backend is not None and not cache and not isinstance(mdp, CachedMDP):
+            raise ValueError(
+                "cost='learned'/'hybrid' requires the transposition cache "
+                "(it is both the training set and the serving seam); "
+                "drop the explicit cache=False or use cost='analytic'"
+            )
+        if (cache or backend is not None) and not isinstance(mdp, CachedMDP):
+            mdp = CachedMDP(mdp, cost_backend=backend)
+        elif (backend is not None and isinstance(mdp, CachedMDP)
+              and mdp.cost_backend is None):
+            mdp.cost_backend = backend
+            backend.bind(mdp.cache)
         self.mdp = mdp
         self.cache: Optional[TranspositionCache] = (
             mdp.cache if isinstance(mdp, CachedMDP) else None
@@ -161,6 +222,17 @@ class ProTuner:
         # master counter (uncached trees keep private mdp copies whose
         # counters accumulate across rounds)
         self._sent_evals: Optional[List[int]] = None
+
+    # ------------------------------------------------------------------
+    def _exact_cost(self, state: State) -> float:
+        """EXACT analytic terminal cost.  With a learned server mounted,
+        the cache (and any miss pricing through ``self.mdp``) may return
+        model predictions — bypass both and price on the inner MDP; with
+        no server, the cached value IS exact, so go through the cache as
+        the PR-2 path always did (hit counters unchanged)."""
+        if self.cost_backend is not None and isinstance(self.mdp, CachedMDP):
+            return self.mdp.mdp.terminal_cost(state)
+        return self.mdp.terminal_cost(state)
 
     # ------------------------------------------------------------------
     def _measure_state(self, state: State) -> float:
@@ -203,14 +275,23 @@ class ProTuner:
             got = fut.result()
             if isinstance(self.trees[i], ArrayMCTS):
                 # delta path: the master's tree object persists
-                delta, res, stats, cache_new, worker_evals = got
+                delta, res, stats, cache_new, worker_evals, serving = got
                 self.trees[i].apply_delta(delta)
                 if self.cache is not None and cache_new is not None:
-                    self.cache.terminal.update(cache_new[0])
-                    self.cache.partial.update(cache_new[1])
+                    # exact-wins merge (TranspositionCache._merge_tbl):
+                    # siblings can race on a state — one model-pricing it,
+                    # one auditing analytically — and exact must survive
+                    self.cache._merge_tbl(
+                        self.cache.terminal, self.cache.terminal_version,
+                        cache_new[0], cache_new[2])
+                    self.cache._merge_tbl(
+                        self.cache.partial, self.cache.partial_version,
+                        cache_new[1], cache_new[3])
                     if stats is not None:
                         self.cache.hits += stats[0]
                         self.cache.misses += stats[1]
+                if serving is not None and self.cost_backend is not None:
+                    self.cost_backend.merge_counters(serving)
                 if base_evals is not None and worker_evals is not None:
                     sent = self._sent_evals[i]
                     if sent < 0:  # master counter at submit is the baseline
@@ -219,7 +300,9 @@ class ProTuner:
                     self._sent_evals[i] = -1
                 results.append(res)
                 continue
-            tree, res, stats = got
+            tree, res, stats, serving = got
+            if serving is not None and self.cost_backend is not None:
+                self.cost_backend.merge_counters(serving)
             if base_evals is not None:
                 sent = self._sent_evals[i]
                 if sent < 0:  # was reattached: baseline is the master counter
@@ -239,6 +322,11 @@ class ProTuner:
                 self._sent_evals[i] = -1 if reattach else worker_evals
             self.trees[i] = tree
             results.append(res)
+        # master-side refit point: workers never refit (their pickled
+        # backends are serve-only), so the merged cache is scored here and
+        # the refreshed model ships with the next round's submissions
+        if isinstance(self.mdp, CachedMDP):
+            self.mdp.on_round_end()
         return results
 
     def run(self, time_budget_s: Optional[float] = None) -> TuneResult:
@@ -311,6 +399,11 @@ class ProTuner:
         best_tree = min(self.trees, key=lambda t: t.global_best)
         final_state = best_tree.global_best_state
         final_cost = best_tree.global_best
+        if self.cost_backend is not None and final_state is not None:
+            # a learned server picked the winner by its ESTIMATES; report
+            # the exact analytic cost of that schedule so TuneResult.cost
+            # is comparable across cost modes
+            final_cost = self._exact_cost(final_state)
         measured = None
         if self.measure_fn is not None and final_state is not None:
             # winner by real time among all measured candidates + final
@@ -318,8 +411,9 @@ class ProTuner:
             cands[final_state] = self._measure_state(final_state)
             final_state = min(cands, key=cands.get)
             measured = cands[final_state]
-            final_cost = self.mdp.terminal_cost(final_state)
+            final_cost = self._exact_cost(final_state)
         n_evals = getattr(self.mdp.cost_model, "n_evals", 0) + self._extra_evals
+        serving = self.cost_backend.stats() if self.cost_backend else None
         return TuneResult(
             plan=self.mdp.plan(final_state),
             cost=final_cost,
@@ -332,6 +426,10 @@ class ProTuner:
             engine=self.engine,
             cache_hits=self.cache.hits if self.cache else 0,
             cache_misses=self.cache.misses if self.cache else 0,
+            cost_mode=self.cost_mode,
+            model_version=serving["model_version"] if serving else 0,
+            n_fits=serving["n_fits"] if serving else 0,
+            learned_evals=serving["learned_plans"] if serving else 0,
         )
 
 
@@ -343,6 +441,7 @@ class MCTSEnsembleBackend:
     algo: str = "mcts"
     config: MCTSConfig = field(default_factory=MCTSConfig)
     engine: str = "array"
+    cost: str = "analytic"  # learned-cost serving mode (engine/serving.py)
     name: str = "mcts"
 
     def run(
@@ -357,6 +456,7 @@ class MCTSEnsembleBackend:
         parallel: bool = False,
         cache: Optional[bool] = None,
         batch: Optional[bool] = None,
+        cost=None,  # None -> the backend's configured self.cost
         **_,
     ) -> TuneResult:
         mc = dataclasses.replace(self.config, seed=seed)
@@ -374,6 +474,7 @@ class MCTSEnsembleBackend:
             engine=self.engine,
             cache=cache,
             batch=batch,
+            cost=cost if cost is not None else self.cost,
         )
         res = tuner.run(time_budget_s=time_budget_s)
         res.algo = self.algo

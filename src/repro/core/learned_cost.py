@@ -1,16 +1,29 @@
-"""Learned cost model (paper §3): a small MLP trained on random COMPLETE
+"""Learned cost model (paper §3): a small MLP trained on COMPLETE
 schedules, in pure JAX.
 
-Reproduces the paper's observation (Fig. 1/2): a model trained on complete
-schedules ranks complete schedules well but mis-ranks partial ones (their
-default-completion features are off-distribution), which is what poisons
-beam search at every depth.
+Two roles in this repo:
+
+* **Reproduction** (Fig. 1/2): a model trained on complete schedules ranks
+  complete schedules well but mis-ranks partial ones (their
+  default-completion features are off-distribution), which is what poisons
+  beam search at every depth — see ``benchmarks/fig12_partial_cost.py``.
+* **Serving** (engine layer): the same MLP is refit online on
+  transposition-cache contents and prices cache-miss batches in one
+  batched forward pass — see ``repro.core.engine.serving`` and
+  ``docs/architecture.md`` for the serving seam.
+
+The forward pass is jitted ONCE at module level (``_mlp_apply_jit``) and
+reused by both the scalar and batched entry points; batches are padded to
+the next power of two so the number of distinct compiled shapes is
+logarithmic in the largest batch ever seen, not linear in the number of
+distinct batch sizes.
 """
 from __future__ import annotations
 
 import random as _random
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from functools import partial
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +34,11 @@ from repro.core.space import SchedulePlan, ScheduleSpace
 
 
 def featurize(plan: SchedulePlan, space: ScheduleSpace) -> np.ndarray:
-    """One-hot per stage + numeric knobs (log-scaled)."""
+    """One-hot per stage + numeric knobs (log-scaled).
+
+    Width = sum(len(stage.options) for the cell's stages) + 4 log-scaled
+    knobs + the overlap scalar; exactly one 1.0 inside each stage's one-hot
+    block (tested in ``tests/test_learned_cost.py``)."""
     feats: List[float] = []
     for stage in space.stages:
         val = getattr(plan, stage.name)
@@ -35,6 +52,18 @@ def featurize(plan: SchedulePlan, space: ScheduleSpace) -> np.ndarray:
     return np.asarray(feats, np.float32)
 
 
+def featurize_batch(
+    plans: Sequence[SchedulePlan], space: ScheduleSpace
+) -> np.ndarray:
+    """``stack([featurize(p) for p in plans])`` as one (N, d) f32 matrix."""
+    return np.stack([featurize(p, space) for p in plans])
+
+
+def _pad_len(n: int) -> int:
+    """Next power of two ≥ n: bounds the jit compile-cache growth."""
+    return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
+
+
 @dataclass
 class LearnedCostModel:
     params: dict
@@ -42,12 +71,33 @@ class LearnedCostModel:
     mean: float
     std: float
     n_evals: int = 0
+    version: int = 1  # fit generation (bumped by the online trainer)
+    n_forward: int = 0  # jitted MLP invocations; a whole batch counts ONCE
 
     def cost(self, plan: SchedulePlan) -> float:
-        self.n_evals += 1
-        x = jnp.asarray(featurize(plan, self.space))
-        y = _mlp_apply(self.params, x[None])[0, 0]
-        return float(jnp.exp(y * self.std + self.mean))
+        return self.cost_batch([plan])[0]
+
+    def cost_batch(self, plans: Sequence[SchedulePlan]) -> List[float]:
+        """Price the whole batch in ONE jitted forward pass.
+
+        Contract: ``cost_batch(plans) ≈ [cost(p) for p in plans]`` to
+        float32 round-off (XLA may fuse the padded matmul differently per
+        batch shape, so this seam — unlike the analytic ``cost_batch`` — is
+        an approximate-parity contract, not a bit-exact one)."""
+        n = len(plans)
+        if n == 0:
+            return []
+        X = featurize_batch(plans, self.space)
+        pad = _pad_len(n)
+        if pad > n:
+            X = np.concatenate(
+                [X, np.zeros((pad - n, X.shape[1]), np.float32)]
+            )
+        y = np.asarray(_mlp_apply_jit(self.params, X))[:n, 0]
+        self.n_evals += n
+        self.n_forward += 1
+        out = np.exp(y.astype(np.float64) * self.std + self.mean)
+        return [float(v) for v in out]
 
     def partial_cost(self, actions, space) -> float:
         defaults = space.default_actions()
@@ -71,6 +121,61 @@ def _mlp_apply(p: dict, x: jax.Array) -> jax.Array:
     return h @ p["w3"] + p["b3"]
 
 
+# jitted once, reused by every model instance; recompiles only per input
+# SHAPE (batches are padded to powers of two by cost_batch)
+_mlp_apply_jit = jax.jit(_mlp_apply)
+
+
+@partial(jax.jit, static_argnames=("steps",))
+def _fit_params(params, X, Y, W, steps: int, lr):
+    """``steps`` of full-batch weighted-MSE gradient descent (one compiled
+    scan; ``W`` masks padding rows so datasets can pad to power-of-two
+    sizes without corrupting the loss)."""
+
+    def step(p, _):
+        def loss_fn(p):
+            err = (_mlp_apply(p, X) - Y) ** 2
+            return jnp.sum(err[:, 0] * W) / jnp.sum(W)
+
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        p = jax.tree.map(lambda a, gg: a - lr * gg, p, g)
+        return p, loss
+
+    params, _ = jax.lax.scan(step, params, jnp.arange(steps))
+    return params
+
+
+def fit_learned_cost(
+    space: ScheduleSpace,
+    plans: Sequence[SchedulePlan],
+    costs: Sequence[float],
+    *,
+    params: Optional[dict] = None,
+    steps: int = 200,
+    lr: float = 3e-3,
+    seed: int = 0,
+) -> LearnedCostModel:
+    """Fit (or warm-start refit, via ``params``) the MLP on explicit
+    ``(plan, cost)`` pairs.  Normalization (log-cost mean/std) is recomputed
+    from THIS dataset — the per-fit renormalization the online trainer
+    requires as the cache's cost distribution shifts during search."""
+    X = featurize_batch(plans, space)
+    logy = np.log(np.maximum(np.asarray(costs, np.float32), 1e-9))
+    mean, std = float(logy.mean()), float(logy.std() + 1e-6)
+    Y = ((logy - mean) / std).astype(np.float32)
+    n = X.shape[0]
+    pad = _pad_len(n)
+    W = np.zeros(pad, np.float32)
+    W[:n] = 1.0
+    if pad > n:
+        X = np.concatenate([X, np.zeros((pad - n, X.shape[1]), np.float32)])
+        Y = np.concatenate([Y, np.zeros(pad - n, np.float32)])
+    if params is None:
+        params = _mlp_init(jax.random.PRNGKey(seed), X.shape[1])
+    params = _fit_params(params, X, Y[:, None], W, steps, lr)
+    return LearnedCostModel(params=params, space=space, mean=mean, std=std)
+
+
 def train_learned_cost(
     space: ScheduleSpace,
     oracle: AnalyticCostModel,
@@ -84,27 +189,8 @@ def train_learned_cost(
     (the paper trains against measured runtimes of random programs)."""
     rng = _random.Random(seed)
     plans = [space.random_plan(rng) for _ in range(n_samples)]
-    X = np.stack([featurize(p, space) for p in plans])
-    y = np.asarray([oracle.cost(p) for p in plans], np.float32)
-    logy = np.log(np.maximum(y, 1e-9))
-    mean, std = float(logy.mean()), float(logy.std() + 1e-6)
-    Y = (logy - mean) / std
-
-    params = _mlp_init(jax.random.PRNGKey(seed), X.shape[1])
-    Xj, Yj = jnp.asarray(X), jnp.asarray(Y)[:, None]
-
-    @jax.jit
-    def step(params, _):
-        def loss_fn(p):
-            pred = _mlp_apply(p, Xj)
-            return jnp.mean((pred - Yj) ** 2)
-
-        loss, g = jax.value_and_grad(loss_fn)(params)
-        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
-        return params, loss
-
-    params, losses = jax.lax.scan(step, params, jnp.arange(steps))
-    return LearnedCostModel(params=params, space=space, mean=mean, std=std)
+    y = [oracle.cost(p) for p in plans]
+    return fit_learned_cost(space, plans, y, steps=steps, lr=lr, seed=seed)
 
 
 def ranking_correlation(

@@ -44,6 +44,17 @@ class ScheduleMDP:
             return self.terminal_cost(state)
         return self.cost_model.partial_cost(state, self.space)
 
+    def completed_plans(self, states: Sequence[State]) -> list:
+        """Default-complete each prefix into a full ``SchedulePlan`` — the
+        features every partial-schedule consumer scores (the analytic
+        batch path here and the learned-cost server in
+        ``engine/serving.py``); defaults resolved once per batch."""
+        defaults = self.space.default_actions()
+        return [
+            self.space.plan_from_actions(list(s) + defaults[len(s):])
+            for s in states
+        ]
+
     # -- batched pricing (values identical to the scalar methods) ----------
     def terminal_cost_batch(self, states: Sequence[State]) -> list:
         """``[terminal_cost(s) for s in states]`` in one cost-model call.
@@ -60,9 +71,4 @@ class ScheduleMDP:
         batch = getattr(self.cost_model, "cost_batch", None)
         if batch is None:
             return [self.partial_cost(s) for s in states]
-        defaults = self.space.default_actions()
-        plans = [
-            self.space.plan_from_actions(list(s) + defaults[len(s):])
-            for s in states
-        ]
-        return batch(plans)
+        return batch(self.completed_plans(states))

@@ -24,6 +24,11 @@ def main(argv=None) -> int:
                     choices=["reference", "array"],
                     help="MCTS tree engine (array = vectorized + shared "
                          "transposition cache; identical results)")
+    ap.add_argument("--cost", default="analytic",
+                    choices=["analytic", "learned", "hybrid"],
+                    help="cost serving mode: analytic (exact), learned "
+                         "(online-trained MLP prices cache misses), hybrid "
+                         "(learned only while confident; analytic fallback)")
     ap.add_argument("--parallel", action="store_true",
                     help="run ensemble trees in a process pool")
     ap.add_argument("--json-out", default=None)
@@ -45,10 +50,15 @@ def main(argv=None) -> int:
         time_budget_s=args.budget_s,
         engine=args.engine,
         parallel=args.parallel,
+        cost=args.cost,
     )
     mdp = make_mdp(args.arch, args.shape, args.mesh)
     terms = mdp.cost_model.terms(res.plan)
     print(f"[autotune] {args.arch}×{args.shape} algo={res.algo}")
+    if res.cost_mode != "analytic":
+        print(f"[autotune] cost serving: {res.cost_mode} "
+              f"(model v{res.model_version}, {res.n_fits} fits, "
+              f"{res.learned_evals} learned-priced plans)")
     print(f"[autotune] best cost {res.cost*1e3:.2f} ms "
           f"(measured: {res.measured and f'{res.measured*1e3:.2f} ms'}) "
           f"evals={res.n_evals} measurements={res.n_measurements} "

@@ -1,0 +1,160 @@
+"""Learned cost model: featurization contract, the jit-once forward fix,
+and the batched-pricing seam (``cost_batch``-vs-scalar parity)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_shape
+from repro.core.space import SINGLE_POD, ScheduleSpace
+
+learned = pytest.importorskip("repro.core.learned_cost")
+
+
+def _space(arch="granite-moe-1b-a400m", shape="train_4k") -> ScheduleSpace:
+    return ScheduleSpace(
+        get_config(arch).reduced(), get_shape(shape), SINGLE_POD
+    )
+
+
+def _model(space, n=96, steps=60):
+    import random
+
+    from repro.core.cost_model import AnalyticCostModel
+
+    rng = random.Random(0)
+    plans = [space.random_plan(rng) for _ in range(n)]
+    oracle = AnalyticCostModel(space.cfg, space.shape, space.mesh)
+    return learned.fit_learned_cost(
+        space, plans, [oracle.cost(p) for p in plans], steps=steps
+    )
+
+
+# ---------------------------------------------------------------------------
+# featurize
+# ---------------------------------------------------------------------------
+def test_featurize_width_matches_space():
+    space = _space()
+    plan = space.plan_from_actions(space.default_actions())
+    want = sum(len(s.options) for s in space.stages) + 5  # 4 log knobs + overlap
+    assert learned.featurize(plan, space).shape == (want,)
+
+
+def test_featurize_one_hot_exclusive_per_stage():
+    import random
+
+    space = _space()
+    rng = random.Random(7)
+    for _ in range(16):
+        plan = space.random_plan(rng)
+        f = learned.featurize(plan, space)
+        off = 0
+        for stage in space.stages:
+            block = f[off:off + len(stage.options)]
+            assert set(block.tolist()) <= {0.0, 1.0}
+            assert block.sum() == 1.0, f"stage {stage.name} not one-hot"
+            # the hot slot is the plan's actual value
+            assert stage.options[int(np.argmax(block))] == getattr(
+                plan, stage.name
+            )
+            off += len(stage.options)
+
+
+def test_featurize_log_knobs_monotone():
+    import dataclasses
+
+    space = _space()
+    base = space.plan_from_actions(space.default_actions())
+    n_onehot = sum(len(s.options) for s in space.stages)
+    # knob feature slots, in featurize's append order
+    slots = {"microbatches": n_onehot, "attn_q": n_onehot + 1,
+             "attn_kv": n_onehot + 2, "scan_chunk": n_onehot + 3}
+
+    def feat(**kw):
+        return learned.featurize(dataclasses.replace(base, **kw), space)
+
+    mb = [feat(microbatches=m)[slots["microbatches"]] for m in (1, 2, 4, 8)]
+    assert mb == sorted(mb) and len(set(mb)) == len(mb)
+    bq = [feat(attn_block=(b, 256))[slots["attn_q"]] for b in (128, 256, 512)]
+    assert bq == sorted(bq) and len(set(bq)) == len(bq)
+    sc = [feat(scan_chunk=c)[slots["scan_chunk"]] for c in (64, 128, 256)]
+    assert sc == sorted(sc) and len(set(sc)) == len(sc)
+    # log scaling: doubling the knob adds a constant step
+    steps = np.diff(mb)
+    assert np.allclose(steps, steps[0])
+
+
+def test_featurize_batch_stacks_featurize():
+    import random
+
+    space = _space()
+    rng = random.Random(3)
+    plans = [space.random_plan(rng) for _ in range(5)]
+    X = learned.featurize_batch(plans, space)
+    assert X.shape == (5, learned.featurize(plans[0], space).shape[0])
+    for i, p in enumerate(plans):
+        assert np.array_equal(X[i], learned.featurize(p, space))
+
+
+# ---------------------------------------------------------------------------
+# batched forward pass
+# ---------------------------------------------------------------------------
+def test_cost_batch_matches_scalar():
+    import random
+
+    space = _space()
+    model = _model(space)
+    rng = random.Random(11)
+    plans = [space.random_plan(rng) for _ in range(13)]  # pads 13 -> 16
+    batched = model.cost_batch(plans)
+    scalar = [model.cost(p) for p in plans]
+    assert np.allclose(batched, scalar, rtol=1e-5), (batched, scalar)
+    assert all(c > 0 and np.isfinite(c) for c in batched)
+
+
+def test_cost_batch_counts_one_forward_per_batch():
+    import random
+
+    space = _space()
+    model = _model(space)
+    rng = random.Random(11)
+    plans = [space.random_plan(rng) for _ in range(9)]
+    f0, e0 = model.n_forward, model.n_evals
+    model.cost_batch(plans)
+    assert model.n_forward == f0 + 1  # the whole batch is ONE forward pass
+    assert model.n_evals == e0 + len(plans)
+    model.cost(plans[0])
+    assert model.n_forward == f0 + 2
+    assert model.cost_batch([]) == []
+
+
+def test_forward_jit_compiles_once_per_shape():
+    import random
+
+    space = _space()
+    model = _model(space)
+    rng = random.Random(5)
+    plans = [space.random_plan(rng) for _ in range(8)]
+    model.cost(plans[0])  # warm the batch-of-1 shape
+    size0 = learned._mlp_apply_jit._cache_size()
+    for p in plans:
+        model.cost(p)  # the pre-fix code retraced the MLP on every call
+    assert learned._mlp_apply_jit._cache_size() == size0
+
+
+def test_refit_warm_start_and_per_fit_normalization():
+    import random
+
+    space = _space()
+    rng = random.Random(2)
+    plans = [space.random_plan(rng) for _ in range(64)]
+    from repro.core.cost_model import AnalyticCostModel
+
+    oracle = AnalyticCostModel(space.cfg, space.shape, space.mesh)
+    costs = [oracle.cost(p) for p in plans]
+    m1 = learned.fit_learned_cost(space, plans, costs, steps=40)
+    # refit on a shifted cost distribution: normalization must follow it
+    m2 = learned.fit_learned_cost(
+        space, plans, [c * 100.0 for c in costs], params=m1.params, steps=40
+    )
+    assert m2.mean == pytest.approx(m1.mean + np.log(100.0), rel=1e-3)
+    pred = m2.cost_batch(plans[:8])
+    assert all(np.isfinite(p) and p > 0 for p in pred)

@@ -41,6 +41,13 @@ SUITE = [
 # full suite pass stays CPU-tractable; relative ratios preserved (×24 : ×8 : ×1)
 BUDGETS = {"30s": 32, "10s": 12, "1s": 4, "0.5s": 2}
 
+# provenance stamp for every published artifact row: the engine that
+# produced the timing columns (search VALUES are engine-independent —
+# tests/test_differential.py).  ONE constant so benchmarks can never
+# publish contradictory engine provenance.
+ENGINE_STAMP = ("array (batched leaves + shared transposition cache "
+                "+ columnar cost kernel)")
+
 ALGOS_FIG7 = [
     "random",
     "greedy",

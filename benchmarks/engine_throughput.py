@@ -1,28 +1,40 @@
 """Engine throughput: reference Node-tree MCTS vs the vectorized array
-engine, one-at-a-time vs batched leaf evaluation.
+engine — one-at-a-time vs batched leaf evaluation vs the columnar kernel.
 
 Runs the Table-1 ensemble protocol (384 iterations/decision, 15 standard
-+ 1 greedy tree) on two representative cells with three engine legs — the
++ 1 greedy tree) on two representative cells with four engine legs — the
 searches are behaviorally identical for the same seeds (certified by
 ``tests/test_differential.py``), so this is a pure implementation
 comparison:
 
-* ``reference``     — paper-faithful Node trees, scalar pricing, no cache;
-* ``array_scalar``  — the PR-1 array engine: flat arrays + shared
+* ``reference``      — paper-faithful Node trees, scalar pricing, no cache;
+* ``array_scalar``   — the PR-1 array engine: flat arrays + shared
   transposition cache, but one-at-a-time leaf evaluation;
-* ``array``         — the default engine: lockstep pending-leaf rounds
-  with batched terminal-cost evaluation (``run_decision_batch`` +
-  ``cost_batch``).
+* ``array_batched``  — the PR-2 engine: lockstep pending-leaf rounds with
+  batched terminal-cost evaluation, miss batches priced by the scalar
+  per-plan replay (``AnalyticCostModel(columnar=False)``);
+* ``array``          — the default engine: the same lockstep rounds with
+  miss batches priced by the COLUMNAR roofline kernel
+  (``PlanColumns`` + ``_terms_columnar``, one vectorized pass per batch).
 
-Reported per cell: iterations/sec per leg, cache hits/misses, and two
-speedups — ``speedup`` (batched array vs reference, the end-to-end win)
-and ``speedup_batched_vs_scalar`` (the isolated value of batching leaf
-evaluation over the PR-1 engine; ~1.5-1.9x on the decode headline cell at
-Table-1 scale, reported but NOT gated — per-leg ratios are too
-load-sensitive on small CI runners).  ``--check`` enforces exactly two
-things: the array engine beats the reference on the decode cell, and all
-legs produce identical results — the CI perf-smoke gate that keeps the
-default flip honest.
+A cost-kernel microbenchmark rides along per cell (``kernel_*`` columns):
+one deduplicated batch of random unique plans priced scalar-batched vs
+columnar, isolating the kernel win from engine bookkeeping — at Table-1
+miss-batch sizes the column math clears the scalar replay by whatever the
+end-to-end legs can't show once cache hit rates pass 99%.
+
+Reported per cell: iterations/sec per leg, cache hits/misses, and three
+speedups — ``speedup`` (columnar array vs reference, the end-to-end win),
+``speedup_batched_vs_scalar`` (batching leaf evaluation over PR-1), and
+``speedup_columnar_vs_batched`` (the columnar kernel over the scalar
+replay, end-to-end).  ``--check`` enforces three things on the decode
+headline cell: the array engine beats the reference, all legs produce
+identical results, and the columnar kernel does not regress the hot path
+— the isolated kernel microbench must beat the scalar replay outright,
+and the end-to-end columnar leg must clear a catastrophic-regression
+floor (per-leg end-to-end ratios swing wildly under CI cgroup
+throttling; the microbench, measured back-to-back, is where a silent
+kernel regression cannot hide).
 
     PYTHONPATH=src python -m benchmarks.engine_throughput
     PYTHONPATH=src python -m benchmarks.engine_throughput --quick --check
@@ -30,11 +42,13 @@ default flip honest.
 from __future__ import annotations
 
 import argparse
+import random
 import sys
 import time
 
-from benchmarks.common import csv_line, emit
+from benchmarks.common import ENGINE_STAMP, csv_line, emit
 from repro.core.autotuner import make_mdp
+from repro.core.cost_model import AnalyticCostModel
 from repro.core.ensemble import ProTuner
 from repro.core.mcts import MCTSConfig
 
@@ -46,47 +60,121 @@ CELLS = [
     ("granite-moe-1b-a400m", "train_4k"),
 ]
 
+# the end-to-end columnar-vs-batched gate tolerance: at 99%+ cache hit
+# rates pricing is a sliver of wall time, so the leg ratio is parity plus
+# scheduler noise — and on cgroup-throttled CI runners a throttling burst
+# can halve a whole leg (observed: identical code measured anywhere from
+# 0.62x to 1.11x).  The tight regression catch is therefore the kernel
+# microbench (4-9x margin, adjacent measurements, robust under
+# throttling); the leg floor only catches a CATASTROPHIC end-to-end
+# regression (e.g. the kernel engaging where it loses badly).
+COLUMNAR_LEG_FLOOR = 0.5
+KERNEL_BATCH = 256  # microbench batch: a Table-1 first-round miss burst
+
 
 def run_ensemble(cell, engine: str, *, iters: int, n_standard: int,
                  n_greedy: int, seed: int = 0, cache=None,
-                 parallel: bool = False, batch=None):
-    """One full tuning run; returns (TuneResult, iterations, wall_s)."""
+                 parallel: bool = False, batch=None, columnar: bool = True):
+    """One full tuning run; returns (TuneResult, iterations, wall_s).
+    ``columnar=False`` flips the cell's cost model to the pre-columnar
+    scalar replay (values bit-identical; only the pricing path changes).
+    Repetition/noise handling lives in ``bench_cell`` (rotating best-of-
+    reps), not here."""
     arch, shape = cell
     mdp = make_mdp(arch, shape)
+    mdp.cost_model.columnar = columnar
     cfg = MCTSConfig(iters_per_decision=iters, seed=seed)
     tuner = ProTuner(mdp, n_standard=n_standard, n_greedy=n_greedy,
-                     mcts_config=cfg, seed=seed, engine=engine, cache=cache,
-                     parallel=parallel, batch=batch)
+                     mcts_config=cfg, seed=seed, engine=engine,
+                     cache=cache, parallel=parallel, batch=batch)
     t0 = time.perf_counter()
     res = tuner.run()
     wall = time.perf_counter() - t0
-    n_trees = n_standard + n_greedy
-    total_iters = iters * n_trees * len(res.decisions)
+    total_iters = iters * (n_standard + n_greedy) * len(res.decisions)
     return res, total_iters, wall
 
 
-def bench_cell(cell, *, iters: int, n_standard: int, n_greedy: int) -> dict:
+def bench_kernel(cell, *, n_plans: int = KERNEL_BATCH, reps: int = 5) -> dict:
+    """The isolated pricing comparison: one deduplicated batch of random
+    unique plans, scalar-batched replay vs the columnar kernel.  Values
+    are asserted identical; the ratio is the kernel's clean win."""
+    arch, shape = cell
+    mdp = make_mdp(arch, shape)
+    space = mdp.space
+    rng = random.Random(0)
+    seen, plans = set(), []
+    while len(plans) < n_plans:
+        p = space.random_plan(rng)
+        if p not in seen:
+            seen.add(p)
+            plans.append(p)
+    cfg, shp, mesh = space.cfg, space.shape, space.mesh
+    scalar = AnalyticCostModel(cfg, shp, mesh, columnar=False)
+    columnar = AnalyticCostModel(cfg, shp, mesh)  # default: kernel + dispatch
+    assert scalar.cost_batch(plans) == columnar.cost_batch(plans)  # warm + certify
+    t_s = min(
+        _timed(lambda: scalar.cost_batch(plans)) for _ in range(reps)
+    )
+    t_c = min(
+        _timed(lambda: columnar.cost_batch(plans)) for _ in range(reps)
+    )
+    return {
+        "kernel_batch": len(plans),
+        "kernel_scalar_us_per_plan": t_s / len(plans) * 1e6,
+        "kernel_columnar_us_per_plan": t_c / len(plans) * 1e6,
+        "kernel_speedup": t_s / t_c,
+    }
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+LEGS = [
+    # leg key -> run_ensemble overrides; bench_cell round-robins the legs
+    # ACROSS reps (leg order rotates within each rep) so slow temporal
+    # drift in machine load — the dominant noise source on shared runners
+    # — cannot systematically bias any one leg
+    ("reference", dict(engine="reference", columnar=False)),
+    ("array_scalar", dict(engine="array", batch=False, columnar=False)),
+    ("array_batched", dict(engine="array", columnar=False)),
+    ("array", dict(engine="array")),
+]
+
+
+def bench_cell(cell, *, iters: int, n_standard: int, n_greedy: int,
+               reps: int = 3) -> dict:
     out = {"cell": "x".join(cell), "iters_per_decision": iters,
            "n_trees": n_standard + n_greedy,
            # the engine that produced the headline (array_*) columns — the
-           # repo default since PR 2; render_experiments.py reports this
-           "engine": "array (batched leaves + shared transposition cache)"}
+           # repo default; render_experiments.py reports this
+           "engine": ENGINE_STAMP}
 
-    res_ref, it_ref, wall_ref = run_ensemble(
-        cell, "reference", iters=iters, n_standard=n_standard,
-        n_greedy=n_greedy)
+    best = {}
+    for rep in range(max(reps, 1)):
+        for i in range(len(LEGS)):
+            name, kw = LEGS[(i + rep) % len(LEGS)]
+            got = run_ensemble(cell, iters=iters, n_standard=n_standard,
+                               n_greedy=n_greedy, **kw)
+            if name not in best or got[2] < best[name][2]:
+                best[name] = got
+
+    res_ref, it_ref, wall_ref = best["reference"]
     out["reference_wall_s"] = wall_ref
     out["reference_iters_per_sec"] = it_ref / wall_ref
     out["reference_evals"] = res_ref.n_evals
 
-    res_sca, it_sca, wall_sca = run_ensemble(
-        cell, "array", batch=False, iters=iters, n_standard=n_standard,
-        n_greedy=n_greedy)
+    res_sca, it_sca, wall_sca = best["array_scalar"]
     out["array_scalar_wall_s"] = wall_sca
     out["array_scalar_iters_per_sec"] = it_sca / wall_sca
 
-    res_arr, it_arr, wall_arr = run_ensemble(
-        cell, "array", iters=iters, n_standard=n_standard, n_greedy=n_greedy)
+    res_bat, it_bat, wall_bat = best["array_batched"]
+    out["array_batched_wall_s"] = wall_bat
+    out["array_batched_iters_per_sec"] = it_bat / wall_bat
+
+    res_arr, it_arr, wall_arr = best["array"]
     out["array_wall_s"] = wall_arr
     out["array_iters_per_sec"] = it_arr / wall_arr
     out["array_evals"] = res_arr.n_evals
@@ -97,34 +185,49 @@ def bench_cell(cell, *, iters: int, n_standard: int, n_greedy: int) -> dict:
     out["evals_saved"] = res_ref.n_evals - res_arr.n_evals
     out["speedup"] = out["array_iters_per_sec"] / out["reference_iters_per_sec"]
     out["speedup_batched_vs_scalar"] = (
-        out["array_iters_per_sec"] / out["array_scalar_iters_per_sec"])
+        out["array_batched_iters_per_sec"] / out["array_scalar_iters_per_sec"])
+    out["speedup_columnar_vs_batched"] = (
+        out["array_iters_per_sec"] / out["array_batched_iters_per_sec"])
     out["same_result"] = (
-        res_ref.plan == res_sca.plan == res_arr.plan
-        and res_ref.cost == res_sca.cost == res_arr.cost
+        res_ref.plan == res_sca.plan == res_bat.plan == res_arr.plan
+        and res_ref.cost == res_sca.cost == res_bat.cost == res_arr.cost
         and [d["action"] for d in res_ref.decisions]
         == [d["action"] for d in res_sca.decisions]
+        == [d["action"] for d in res_bat.decisions]
         == [d["action"] for d in res_arr.decisions])
+    out.update(bench_kernel(cell))
 
     name = out["cell"]
     csv_line(f"engine_throughput[{name}][reference]", wall_ref * 1e6,
              f"{out['reference_iters_per_sec']:.0f} it/s")
     csv_line(f"engine_throughput[{name}][array+scalar]", wall_sca * 1e6,
              f"{out['array_scalar_iters_per_sec']:.0f} it/s")
-    csv_line(f"engine_throughput[{name}][array+batched]", wall_arr * 1e6,
+    csv_line(f"engine_throughput[{name}][array+batched]", wall_bat * 1e6,
+             f"{out['array_batched_iters_per_sec']:.0f} it/s")
+    csv_line(f"engine_throughput[{name}][array+columnar]", wall_arr * 1e6,
              f"{out['array_iters_per_sec']:.0f} it/s")
+    csv_line(f"engine_throughput_kernel[{name}]",
+             out["kernel_columnar_us_per_plan"],
+             f"{out['kernel_speedup']:.2f}x columnar-vs-scalar on "
+             f"{out['kernel_batch']}-plan miss batches "
+             f"({out['kernel_scalar_us_per_plan']:.1f} -> "
+             f"{out['kernel_columnar_us_per_plan']:.1f} us/plan)")
     csv_line(f"engine_throughput_speedup[{name}]", 0.0,
              f"{out['speedup']:.1f}x vs reference; "
              f"{out['speedup_batched_vs_scalar']:.2f}x batched-vs-scalar; "
+             f"{out['speedup_columnar_vs_batched']:.2f}x columnar-vs-batched; "
              f"cache_hits={out['cache_hits']}; "
              f"hit_rate={out['cache_hit_rate']:.3f}; "
              f"evals_saved={out['evals_saved']}; same={out['same_result']}")
     return out
 
 
-def main(iters: int = 384, n_standard: int = 15, n_greedy: int = 1) -> list:
+def main(iters: int = 384, n_standard: int = 15, n_greedy: int = 1,
+         publish: bool = True, reps: int = 3) -> list:
     rows = [bench_cell(c, iters=iters, n_standard=n_standard,
-                       n_greedy=n_greedy) for c in CELLS]
-    emit(rows, "engine_throughput")
+                       n_greedy=n_greedy, reps=reps) for c in CELLS]
+    if publish:  # scaled-down (--quick / CI-gate) runs must not overwrite
+        emit(rows, "engine_throughput")  # the published Table-1 artifact
     return rows
 
 
@@ -133,16 +236,19 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true",
                     help="scaled-down budgets (96 iters, 7+1 trees)")
     ap.add_argument("--check", action="store_true",
-                    help="exit 1 unless the array engine beats reference on "
-                         "the decode cell with identical results (CI gate)")
+                    help="exit 1 unless, on the decode cell: the array "
+                         "engine beats reference, the columnar kernel "
+                         "holds the hot path (leg parity + microbench "
+                         "win), and all legs agree (CI gate)")
     args = ap.parse_args()
-    kw = dict(iters=96, n_standard=7) if args.quick else {}
+    kw = dict(iters=96, n_standard=7, publish=False, reps=2) if args.quick else {}
     rows = main(**kw)
     r = rows[0]
     print(f"# headline {r['cell']}: {r['speedup']:.2f}x vs reference, "
-          f"{r['speedup_batched_vs_scalar']:.2f}x batched-vs-scalar "
-          f"({r['array_scalar_iters_per_sec']:.0f} -> "
-          f"{r['array_iters_per_sec']:.0f} it/s), "
+          f"{r['speedup_columnar_vs_batched']:.2f}x columnar-vs-batched "
+          f"({r['array_batched_iters_per_sec']:.0f} -> "
+          f"{r['array_iters_per_sec']:.0f} it/s), kernel "
+          f"{r['kernel_speedup']:.2f}x on {r['kernel_batch']}-plan batches, "
           f"cache hits {r['cache_hits']}, evals saved {r['evals_saved']}, "
           f"identical result: {r['same_result']}")
     if args.check:
@@ -154,8 +260,19 @@ if __name__ == "__main__":
             bad.append(
                 f"{rows[0]['cell']}: array engine slower than reference "
                 f"({rows[0]['speedup']:.2f}x)")
+        if rows[0]["kernel_speedup"] < 1.0:
+            bad.append(
+                f"{rows[0]['cell']}: columnar kernel slower than the "
+                f"scalar replay on {rows[0]['kernel_batch']}-plan batches "
+                f"({rows[0]['kernel_speedup']:.2f}x)")
+        if rows[0]["speedup_columnar_vs_batched"] < COLUMNAR_LEG_FLOOR:
+            bad.append(
+                f"{rows[0]['cell']}: columnar leg regressed end-to-end "
+                f"({rows[0]['speedup_columnar_vs_batched']:.2f}x < "
+                f"{COLUMNAR_LEG_FLOOR})")
         if bad:
             print("# CHECK FAILED: " + "; ".join(bad))
             sys.exit(1)
-        print("# check passed: array >= reference on the decode cell, "
-              "all legs identical")
+        print("# check passed: array >= reference, columnar kernel >= "
+              "scalar replay, columnar leg holds the batched leg, all "
+              "legs identical on the decode cell")

@@ -5,10 +5,17 @@ We train the learned MLP cost model on random complete schedules, then
 measure Spearman rank correlation against the oracle on (a) complete
 schedules and (b) partial prefixes of increasing depth (scored through their
 default completion — the only thing beam search can do).  The paper's
-observation is the monotone degradation in (b)."""
+observation is the monotone degradation in (b).
+
+Everything prices through the BATCH seam: training labels and both
+correlation legs go through ``cost_batch`` (one columnar-kernel pass per
+sweep for the analytic oracle, one jitted forward pass for the MLP, with
+the prefix legs default-completed against the space's memoized default
+actions) — so this artifact exercises the same batched pricing path the
+engine serves, not a private scalar loop."""
 from __future__ import annotations
 
-from benchmarks.common import csv_line, emit
+from benchmarks.common import ENGINE_STAMP, csv_line, emit
 from repro.core.autotuner import make_mdp
 from repro.core.learned_cost import ranking_correlation, train_learned_cost
 
@@ -35,7 +42,9 @@ def main() -> dict:
         }
         out[f"{arch}"] = {"complete": rc_complete, **{f"d{d}": v for d, v in rc_partial.items()}}
         rows.append({"cell": f"{arch}×{shape}", "complete": rc_complete,
-                     **{f"partial_d{d}": v for d, v in rc_partial.items()}})
+                     **{f"partial_d{d}": v for d, v in rc_partial.items()},
+                     "engine": ENGINE_STAMP,
+                     "pricing": "cost_batch (columnar)"})
         print(f"[fig12] {arch}: complete={rc_complete:.3f} " +
               " ".join(f"d{d}={v:.3f}" for d, v in rc_partial.items()),
               flush=True)

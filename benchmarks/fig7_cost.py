@@ -9,8 +9,8 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import (ALGOS_FIG7, SUITE, best_of_seeds, csv_line,
-                               emit, geomean)
+from benchmarks.common import (ALGOS_FIG7, ENGINE_STAMP as ENGINE, SUITE,
+                               best_of_seeds, csv_line, emit, geomean)
 
 NOISE = 0.25
 
@@ -22,22 +22,26 @@ def main(cells=None, seeds=(0, 1, 2)) -> dict:
     for arch, shape in cells:
         t0 = time.time()
         costs = {}
+        walls = {}
         for algo in ALGOS_FIG7:
+            ta = time.time()
             (res, mdp) = best_of_seeds(arch, shape, algo, seeds=seeds,
                                        noise_sigma=NOISE)
+            walls[algo] = time.time() - ta
             costs[algo] = res.cost
         best = min(costs.values())
         for algo, c in costs.items():
             norm = c / best
             per_algo[algo].append(norm)
             rows.append({"cell": f"{arch}×{shape}", "algo": algo,
-                         "cost_s": c, "normalized": norm})
+                         "cost_s": c, "normalized": norm,
+                         "wall_s_all_seeds": walls[algo], "engine": ENGINE})
         print(f"[fig7] {arch}×{shape}: " + " ".join(
             f"{a}={costs[a]/best:.3f}" for a in ALGOS_FIG7) +
             f" ({time.time()-t0:.0f}s)", flush=True)
     summary = {a: geomean(v) for a, v in per_algo.items()}
-    emit(rows + [{"cell": "GEOMEAN", "algo": a, "normalized": g}
-                 for a, g in summary.items()], "fig7_cost")
+    emit(rows + [{"cell": "GEOMEAN", "algo": a, "normalized": g,
+                  "engine": ENGINE} for a, g in summary.items()], "fig7_cost")
     for a, g in summary.items():
         csv_line(f"fig7_cost_geomean[{a}]", 0.0, f"{g:.4f}")
     return summary

@@ -65,7 +65,8 @@ def main(argv=None) -> None:
     if want("engine"):
         print("# --- engine: array MCTS + transposition cache throughput ---")
         if args.quick:
-            engine_throughput.main(iters=96, n_standard=7)
+            engine_throughput.main(iters=96, n_standard=7, publish=False,
+                                   reps=2)
         else:
             engine_throughput.main()
     if want("serving"):

@@ -3,7 +3,10 @@
 paper's §4.1 claims (binary rewards ≈9%% worse; best-cost root choice)."""
 from __future__ import annotations
 
-from benchmarks.common import SUITE, best_of_seeds, csv_line, emit, geomean
+import time
+
+from benchmarks.common import (ENGINE_STAMP as ENGINE, SUITE, best_of_seeds,
+                               csv_line, emit, geomean)
 
 NOISE = 0.25
 VARIANTS = [
@@ -22,14 +25,18 @@ def main(cells=None, seeds=(0, 1)) -> dict:
     rows = []
     for arch, shape in cells:
         costs = {}
+        walls = {}
         for v in VARIANTS:
+            t0 = time.time()
             res, _ = best_of_seeds(arch, shape, v, seeds=seeds, noise_sigma=NOISE)
+            walls[v] = time.time() - t0
             costs[v] = res.cost
         best = min(costs.values())
         for v, c in costs.items():
             per_variant[v].append(c / best)
             rows.append({"cell": f"{arch}×{shape}", "variant": v,
-                         "cost_s": c, "normalized": c / best})
+                         "cost_s": c, "normalized": c / best,
+                         "wall_s_all_seeds": walls[v], "engine": ENGINE})
         print(f"[table1] {arch}×{shape}: " + " ".join(
             f"{v}={costs[v]/best:.3f}" for v in VARIANTS), flush=True)
     summary = {v: geomean(xs) for v, xs in per_variant.items()}

@@ -25,13 +25,31 @@ terms are per the assignment's formulas:
     memory_s     = HBM B   / (chips × 819 GB/s)
     collective_s = wire B/chip / 50 GB/s
     step_s       = max(compute, memory) + (1 - overlap)·collective
+
+Since the columnar refactor the hot path is ONE kernel: a batch of plans
+is encoded once as a structure-of-arrays (``PlanColumns.from_plans``) and
+every roofline term is computed as numpy column math over the whole batch
+(``_terms_columnar``).  The scalar ``cost()``/``terms()`` route through
+the same size dispatch as ``cost_batch`` (a batch of one), so the scalar
+and batched signals cannot drift apart.  The pre-columnar per-plan
+arithmetic is kept verbatim as ``_terms_scalar`` — the oracle the kernel
+is differentially certified against (and, because certification makes
+the two interchangeable, the fast path for batches below
+``columnar_min_batch`` where numpy dispatch overhead dominates): the
+column math performs the same IEEE-754 operations on the same operands
+in the same order (inapplicable parts contribute exact ``0.0`` addends;
+branch-dependent constants are gathered per discrete key), so the two
+paths agree bit-for-bit, asserted by ``tests/test_differential.py`` and
+the hypothesis properties.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.core.space import MeshSpec, SchedulePlan, ScheduleSpace
@@ -52,6 +70,127 @@ HW = HardwareSpec()
 
 BF16 = 2
 F32 = 4
+
+# ---------------------------------------------------------------------------
+# Discrete plan-field code tables (shared by the columnar kernel and the
+# learned-cost featurizer).  Codes index into these tuples; the derived
+# boolean lookup tables vectorize the scalar ``in (...)`` membership tests.
+# ---------------------------------------------------------------------------
+STRATEGIES = ("replicated", "tp", "fsdp", "fsdp_tp", "tp2d")
+MOE_MODES = ("ep", "tp", "dense")
+REMAT_MODES = ("none", "dots", "full")
+GRAD_COMM_MODES = ("fp32", "int8", "rs_ag")
+
+_STRAT_CODE = {s: i for i, s in enumerate(STRATEGIES)}
+_MOE_CODE = {m: i for i, m in enumerate(MOE_MODES)}
+_REMAT_CODE = {r: i for i, r in enumerate(REMAT_MODES)}
+_GRAD_CODE = {g: i for i, g in enumerate(GRAD_COMM_MODES)}
+
+# the ONE definition of which strategies enable each sharding axis —
+# the scalar path's membership tests and the kernel's boolean gather
+# tables both derive from these (no third copy to drift)
+TP_STRATEGIES = frozenset(("tp", "fsdp_tp", "tp2d"))
+FSDP_STRATEGIES = frozenset(("fsdp", "fsdp_tp", "tp2d"))
+_TP_ON = np.array([s in TP_STRATEGIES for s in STRATEGIES])
+_FSDP_ON = np.array([s in FSDP_STRATEGIES for s in STRATEGIES])
+
+# branch constants, in code order — gathered per plan by the kernel with the
+# exact values the scalar dict lookups produce
+_REMAT_MULT = np.array([3.0, 3.35, 4.0])  # none, dots, full
+_GRAD_SCALE_ZERO3 = np.array([2.0, 0.5, 1.0])  # fp32, int8, rs_ag
+_GRAD_SCALE_AR = np.array([2.0, 0.25, 1.0])
+# resident bytes/param (same expressions as _state_bytes_per_param)
+_SBYTES_F32 = BF16 + 2 * 4 + 4
+_SBYTES_INT8 = BF16 + 2 * 1.1 + 4
+
+
+class PlanColumns:
+    """Structure-of-arrays encoding of a ``SchedulePlan`` batch.
+
+    One pass over the plan objects extracts every decision field into a
+    flat numpy column (discrete string fields as small-int codes, flags as
+    booleans, knobs as integers/floats).  This is the ONE encode a pricing
+    batch pays: the analytic kernel (``_terms_columnar``) and the learned
+    MLP featurizer (``learned_cost.featurize_columns``) both read these
+    columns, so a miss batch handed to ``HybridCostBackend`` is encoded
+    once whichever backend ends up pricing it.
+
+    ``plans`` keeps the original objects (ordered) so non-columnar
+    consumers — the scalar oracle path, test doubles — can fall back
+    without re-materializing them.
+    """
+
+    __slots__ = (
+        "n", "plans", "pod_data", "strategy", "tp_on", "fsdp_on", "tp2d",
+        "mixer_tp", "seq_shard", "ffn_tp", "moe_mode", "moe_ep", "moe_tp",
+        "vocab_shard", "remat", "microbatches", "bq", "bkv", "scan_chunk",
+        "grad_comm", "overlap", "opt_int8", "kv_int8",
+    )
+
+    @classmethod
+    def from_plans(cls, plans: Sequence[SchedulePlan]) -> "PlanColumns":
+        self = cls.__new__(cls)
+        self.n = len(plans)
+        self.plans = list(plans)
+        self.pod_data = np.array(
+            [p.batch_axes == "pod_data" for p in plans], dtype=bool
+        )
+        strat = np.array([_STRAT_CODE[p.param_strategy] for p in plans],
+                         dtype=np.int64)
+        self.strategy = strat
+        self.tp_on = _TP_ON[strat]
+        self.fsdp_on = _FSDP_ON[strat]
+        self.tp2d = strat == _STRAT_CODE["tp2d"]
+        self.mixer_tp = np.array([p.mixer_tp for p in plans], dtype=bool)
+        self.seq_shard = np.array([p.seq_shard for p in plans], dtype=bool)
+        self.ffn_tp = np.array([p.ffn_tp for p in plans], dtype=bool)
+        moe = np.array([_MOE_CODE[p.moe_mode] for p in plans], dtype=np.int64)
+        self.moe_mode = moe
+        self.moe_ep = moe == _MOE_CODE["ep"]
+        self.moe_tp = moe == _MOE_CODE["tp"]
+        self.vocab_shard = np.array([p.vocab_shard for p in plans], dtype=bool)
+        self.remat = np.array([_REMAT_CODE[p.remat] for p in plans],
+                              dtype=np.int64)
+        self.microbatches = np.array([p.microbatches for p in plans],
+                                     dtype=np.int64)
+        self.bq = np.array([p.attn_block[0] for p in plans], dtype=np.int64)
+        self.bkv = np.array([p.attn_block[1] for p in plans], dtype=np.int64)
+        self.scan_chunk = np.array([p.scan_chunk for p in plans],
+                                   dtype=np.int64)
+        self.grad_comm = np.array([_GRAD_CODE[p.grad_comm] for p in plans],
+                                  dtype=np.int64)
+        self.overlap = np.array([p.overlap for p in plans], dtype=np.float64)
+        self.opt_int8 = np.array([p.opt_dtype == "int8" for p in plans],
+                                 dtype=bool)
+        self.kv_int8 = np.array([p.kv_dtype == "int8" for p in plans],
+                                dtype=bool)
+        return self
+
+    def stage_onehots(self, stage) -> List[np.ndarray]:
+        """Boolean indicator columns, one per option of ``stage``, in
+        option order — ``stage_onehots(s)[a][i]`` is True iff plan ``i``
+        chose option ``a``.  The vectorized equivalent of the learned
+        featurizer's per-stage one-hot block (``learned_cost.featurize``),
+        shared so both cost backends read one encoding."""
+        name = stage.name
+        if name == "attn_block":
+            return [(self.bq == q) & (self.bkv == k) for q, k in stage.options]
+        if name == "batch_axes":
+            return [self.pod_data == (o == "pod_data") for o in stage.options]
+        coded = {
+            "param_strategy": (self.strategy, _STRAT_CODE),
+            "moe_mode": (self.moe_mode, _MOE_CODE),
+            "remat": (self.remat, _REMAT_CODE),
+            "grad_comm": (self.grad_comm, _GRAD_CODE),
+        }
+        if name in coded:
+            col, code = coded[name]
+            return [col == code[o] for o in stage.options]
+        if name in ("opt_dtype", "kv_dtype"):
+            col = self.opt_int8 if name == "opt_dtype" else self.kv_int8
+            return [col == (o == "int8") for o in stage.options]
+        col = getattr(self, name)  # bool flags / numeric knobs
+        return [col == o for o in stage.options]
 
 
 @dataclass
@@ -110,6 +249,7 @@ class _EvalContext:
     __slots__ = (
         "m", "_fwd_total", "_param_bytes", "_param_count", "_groups",
         "_layer_counts", "_act_mults", "_kv_totals", "_vmem_spill",
+        "_n_periods", "_n_active",
     )
 
     def __init__(self, model: "AnalyticCostModel"):
@@ -122,6 +262,18 @@ class _EvalContext:
         self._act_mults: Dict[int, Tuple[float, float]] = {}
         self._kv_totals: Dict[float, float] = {}
         self._vmem_spill: Dict[Tuple[int, int], bool] = {}
+        self._n_periods: Optional[int] = None
+        self._n_active: Optional[int] = None
+
+    def n_periods(self) -> int:
+        if self._n_periods is None:
+            self._n_periods = self.m.cfg.n_periods
+        return self._n_periods
+
+    def active_param_count(self) -> int:
+        if self._n_active is None:
+            self._n_active = self.m.cfg.active_param_count()
+        return self._n_active
 
     def fwd_flops(self) -> float:
         if self._fwd_total is None:
@@ -223,11 +375,31 @@ class AnalyticCostModel:
         shape: InputShape,
         mesh: MeshSpec,
         hw: HardwareSpec = HW,
+        columnar: bool = True,
+        columnar_min_batch: int = 16,
     ):
         self.cfg = cfg
         self.shape = shape
         self.mesh = mesh
         self.hw = hw
+        # columnar=True (default): batch pricing runs through the one
+        # vectorized kernel (_terms_columnar).  columnar=False keeps the
+        # pre-columnar protocol end to end (fresh-context scalar terms(),
+        # per-unique-plan replay in cost_batch) — the oracle the kernel is
+        # certified bit-identical against, and the baseline leg of
+        # benchmarks/engine_throughput.py.
+        self.columnar = columnar
+        # Unique-plan count below which a columnar batch dispatches to the
+        # scalar replay instead of the kernel: numpy column dispatch costs
+        # ~2us/op regardless of width (plus ~25 fresh temp buffers per
+        # call, which interleaved engine workloads feel harder than tight
+        # microbenchmarks do), so small batches — greedy rollout sweeps,
+        # single leaves, half-warm lockstep rounds — price faster as
+        # scalar walks.  The two paths are certified bit-identical, so
+        # the threshold is a pure performance knob — results cannot
+        # depend on it.  Set to 1 to force every batch through the kernel
+        # (the differential tests do).
+        self.columnar_min_batch = columnar_min_batch
         self.n_evals = 0
         self._batch_ctx: Optional[_EvalContext] = None
 
@@ -244,9 +416,9 @@ class AnalyticCostModel:
         dp = mesh.axis("data")
         if plan.batch_axes == "pod_data" and mesh.multi_pod:
             dp *= mesh.axis("pod")
-        tp_on = plan.param_strategy in ("tp", "fsdp_tp", "tp2d")
+        tp_on = plan.param_strategy in TP_STRATEGIES
         tp = mesh.axis("model") if tp_on else 1
-        fsdp = dp if plan.param_strategy in ("fsdp", "fsdp_tp", "tp2d") else 1
+        fsdp = dp if plan.param_strategy in FSDP_STRATEGIES else 1
         return dp, tp, fsdp, tp_on
 
     # ------------------------------------------------------------------
@@ -396,7 +568,7 @@ class AnalyticCostModel:
         if plan.seq_shard:
             # the sequence dim absorbs whatever the batch dim can't use
             shard *= (dp // dp_used) * (tp if not plan.mixer_tp else 1)
-        if plan.mixer_tp and plan.param_strategy in ("tp", "fsdp_tp", "tp2d"):
+        if plan.mixer_tp and plan.param_strategy in TP_STRATEGIES:
             shard *= min(tp, max(cfg.n_kv_heads, 1))
         return total / shard
 
@@ -466,15 +638,44 @@ class AnalyticCostModel:
         return total, out
 
     # ------------------------------------------------------------------
+    def _ctx(self) -> _EvalContext:
+        ctx = self._batch_ctx
+        if ctx is None:
+            ctx = self._batch_ctx = _EvalContext(self)
+        return ctx
+
     def terms(
         self, plan: SchedulePlan, _ctx: Optional[_EvalContext] = None
     ) -> RooflineTerms:
-        """Roofline terms for one plan.  Scalar calls build a fresh
-        ``_EvalContext`` (same work as always); ``cost_batch`` passes its
-        persistent context so the plan-independent accounting amortizes
-        across the batch — the returned values are bit-identical either
-        way (see ``_EvalContext``)."""
+        """Roofline terms for one plan.
+
+        Columnar mode (the default) prices through the same kernel
+        dispatch as ``cost_batch`` — a batch of one lands below
+        ``columnar_min_batch``, so it runs the certified scalar replay
+        over the shared persistent context (force ``columnar_min_batch=1``
+        to exercise the column kernel itself).  ``columnar=False`` (or an
+        explicit ``_ctx``, the pre-columnar batch protocol) replays the
+        per-plan scalar arithmetic with a fresh context, exactly as before
+        the refactor; values are bit-identical every way.
+        """
         self.n_evals += 1
+        if _ctx is not None or not self.columnar:
+            return self._terms_scalar(plan, _ctx)
+        if self.columnar_min_batch <= 1:
+            cols = PlanColumns.from_plans([plan])
+            return self._assemble_terms(
+                self._terms_columnar(cols, self._ctx()), 0
+            )
+        return self._terms_scalar(plan, self._ctx())
+
+    def _terms_scalar(
+        self, plan: SchedulePlan, _ctx: Optional[_EvalContext] = None
+    ) -> RooflineTerms:
+        """The pre-columnar per-plan arithmetic — kept verbatim as the
+        oracle ``_terms_columnar`` is certified against.  Scalar calls
+        build a fresh ``_EvalContext``; the (pre-columnar) batch path
+        passes its persistent context so plan-independent accounting
+        amortizes — bit-identical either way (see ``_EvalContext``)."""
         ctx = _ctx if _ctx is not None else _EvalContext(self)
         cfg, shape, hw = self.cfg, self.shape, self.hw
         chips = self.mesh.size
@@ -579,27 +780,311 @@ class AnalyticCostModel:
         )
 
     # ------------------------------------------------------------------
+    # The columnar kernel
+    # ------------------------------------------------------------------
+    def _terms_columnar(self, cols: PlanColumns, ctx: _EvalContext) -> dict:
+        """Every roofline term for a whole encoded batch, as numpy column
+        math — the single pricing kernel behind ``cost``, ``cost_batch``
+        and ``cost_columns``.
+
+        Bit-identity with ``_terms_scalar`` is engineered, not hoped for:
+        every column expression performs the scalar path's IEEE-754
+        operations on the same operands in the same association order
+        (elementwise float64 ops are correctly rounded, so ``a op b`` is
+        the same double either way); branch-dependent constants are
+        gathered per discrete key with the values the scalar dict lookups
+        produce; and parts a plan's branches skip contribute exact ``0.0``
+        addends (``x + 0.0 == x`` for the non-negative quantities summed
+        here).  The differential grid and the hypothesis properties
+        assert the resulting equality on every value."""
+        cfg, shape, hw, mesh = self.cfg, self.shape, self.hw, self.mesh
+        n = cols.n
+        train = shape.kind == "train"
+        decode = shape.kind == "decode"
+        chips = mesh.size
+        gbm = max(shape.global_batch, 1)
+
+        # ---- mesh sizes (ints, exact in float64) ----
+        dp = np.full(n, mesh.axis("data"), dtype=np.int64)
+        if mesh.multi_pod:
+            dp = np.where(cols.pod_data, dp * mesh.axis("pod"), dp)
+        tp = np.where(cols.tp_on, mesh.axis("model"), 1)
+        fsdp = np.where(cols.fsdp_on, dp, 1)
+        n_mb = np.maximum(cols.microbatches, 1)
+        dp_eff = np.minimum(dp, gbm)
+
+        # ---- compute ----
+        fwd = ctx.fwd_flops()
+        if train:
+            flops = fwd * _REMAT_MULT[cols.remat] + 10.0 * ctx.param_count()
+        else:
+            flops = np.full(n, float(fwd))
+        k_tile = (512.0 / 576.0) ** 2
+        eff = (cols.bq / (cols.bq + 64.0)) * (cols.bkv / (cols.bkv + 64.0)) / k_tile
+        eff = np.minimum(eff, 1.0)
+        if cfg.n_heads:
+            pairs = set(zip(cols.bq.tolist(), cols.bkv.tolist()))
+            if len(pairs) == 1:
+                if ctx.vmem_spills(*next(iter(pairs))):
+                    eff = eff * 0.5
+            else:
+                spill = np.zeros(n, dtype=bool)
+                for q, k in pairs:
+                    spill[(cols.bq == q) & (cols.bkv == k)] = ctx.vmem_spills(
+                        q, k
+                    )
+                eff = np.where(spill, eff * 0.5, eff)
+        mb_eff = np.where(n_mb > 1, 1.0 - 0.015 * np.log2(n_mb), 1.0)
+        tax = np.where(cols.overlap >= 0.9, 1.05, 1.0)
+        compute_s = flops / (chips * hw.peak_flops) / (eff * mb_eff) * tax
+        if cfg.is_ssm:
+            grid_steps = (
+                shape.tokens / np.maximum(dp, 1) / cols.scan_chunk
+                * (cfg.d_inner / 256.0)
+            )
+            compute_s = compute_s + grid_steps * 0.3e-6 / np.maximum(chips / dp, 1)
+
+        # ---- sharded parameter bytes (shared by memory/collectives/capacity)
+        g = ctx.param_groups()
+        tp_gt1 = tp > 1
+        tot = g["mixer"] / np.where(cols.mixer_tp & tp_gt1, tp, 1)
+        tot = tot + g["ffn"] / np.where(cols.ffn_tp & tp_gt1, tp, 1)
+        if g["moe"]:
+            moe_div = np.where(
+                cols.moe_ep & tp_gt1, np.minimum(tp, cfg.n_experts),
+                np.where(cols.moe_tp & tp_gt1, tp, 1),
+            )
+            tot = tot + g["moe"] / moe_div
+        vs_ok = cfg.vocab_size % mesh.axis("model") == 0  # tp>1 => tp==model ax
+        vshard = np.where(cols.vocab_shard & tp_gt1 & vs_ok, tp, 1)
+        tot = tot + g["vocab"] / vshard
+        tot = tot + g["other"]
+        p_tp = tot * BF16
+
+        # ---- memory (HBM traffic, accounted per chip) ----
+        weight_reads = p_tp * n_mb * (2 if train else 1)
+        ppc = p_tp / BF16 / fsdp  # params per chip (post-FSDP)
+        if train:
+            sbytes = np.where(cols.opt_int8, _SBYTES_INT8, _SBYTES_F32)
+            opt_traffic = ppc * (2 * sbytes + 4)
+        else:
+            opt_traffic = 0.0
+        tl = shape.tokens / dp_eff  # tokens per (batch-limited) data shard
+        act_traffic = tl * cfg.d_model * BF16 * cfg.n_layers * (6 if train else 3)
+        if train:
+            act_traffic = np.where(cols.remat != 0, act_traffic * 1.35, act_traffic)
+        if decode:
+            kvt = np.empty(n)
+            if bool(cols.kv_int8.any()):
+                kvt[cols.kv_int8] = ctx.kv_total(1.06)
+            if not bool(cols.kv_int8.all()):
+                kvt[~cols.kv_int8] = ctx.kv_total(BF16)
+            kvt = kvt * ctx.n_periods()
+            shard = dp_eff
+            seq_mult = (dp // dp_eff) * np.where(~cols.mixer_tp, tp, 1)
+            shard = np.where(cols.seq_shard, shard * seq_mult, shard)
+            kv_heads = np.minimum(tp, max(cfg.n_kv_heads, 1))
+            shard = np.where(cols.mixer_tp & cols.tp_on, shard * kv_heads, shard)
+            kv_col = kvt / shard
+        else:
+            kv_col = 0.0
+        per_chip_traffic = weight_reads + opt_traffic + act_traffic + kv_col
+        hbm_bytes = per_chip_traffic * chips
+        memory_s = per_chip_traffic / hw.hbm_bw
+
+        # ---- collectives ----
+        parts = []
+        if train:
+            shard_bytes = p_tp / fsdp
+            ag = shard_bytes * (fsdp - 1)
+            rs = ag * _GRAD_SCALE_ZERO3[cols.grad_comm]
+            zero3 = (2 * ag + rs) * n_mb
+            grad_ar = 2 * p_tp * (dp - 1) / dp * _GRAD_SCALE_AR[cols.grad_comm]
+            fsdp_on = fsdp > 1
+            param_part = np.where(fsdp_on, zero3, grad_ar)
+            pod_part = param_part  # the DP collectives that cross pods
+            parts.append(("zero3", fsdp_on, zero3))
+            parts.append(("grad_allreduce", ~fsdp_on, grad_ar))
+        else:
+            wg_mask = cols.tp2d & (fsdp > 1)
+            wg = p_tp / fsdp * (fsdp - 1)
+            param_part = np.where(wg_mask, wg, 0.0)
+            pod_part = np.zeros(n)
+            parts.append(("weight_gather", wg_mask, wg))
+        act = tl * cfg.d_model * BF16
+        n_attn, n_mamba, n_dense, n_moe = ctx.layer_counts()
+        n_ar = (
+            np.where(cols.mixer_tp, n_attn + n_mamba, 0)
+            + np.where(cols.ffn_tp, n_dense, 0)
+            + np.where(cols.moe_tp, n_moe, 0)
+        ) * ctx.n_periods()
+        wire_one = 2 * act * (tp - 1) / tp
+        wire_one = np.where(cols.seq_shard, wire_one * 0.5, wire_one)
+        tp_act = n_ar * wire_one
+        if train:
+            tp_act = tp_act * 3
+        tp_act = np.where(tp_gt1, tp_act, 0.0)
+        parts.append(("tp_act", tp_gt1, tp_act))
+        vocab_part = 2 * act * (tp - 1) / tp * (3 if train else 1)
+        vocab_mask = tp_gt1 & cols.vocab_shard
+        vocab_part = np.where(vocab_mask, vocab_part, 0.0)
+        parts.append(("vocab", vocab_mask, vocab_part))
+        if cfg.is_moe:
+            ep = np.minimum(tp, cfg.n_experts)
+            a2a = tl * cfg.experts_per_token * 1.25 * cfg.d_model * BF16
+            moe_part = 2 * a2a * (ep - 1) / ep * (3 if train else 1)
+            moe_mask = cols.moe_ep & tp_gt1
+            moe_part = np.where(moe_mask, moe_part, 0.0)
+            parts.append(("moe_a2a", moe_mask, moe_part))
+            coll = param_part + tp_act + vocab_part + moe_part
+        else:
+            coll = param_part + tp_act + vocab_part
+        if mesh.multi_pod:
+            denom = np.maximum(coll, 1e-9)
+            link_eff = (
+                (coll - pod_part) / denom * hw.link_bw
+                + pod_part / denom * hw.pod_link_bw
+            )
+            link = np.where(
+                cols.pod_data, np.maximum(link_eff, hw.pod_link_bw), hw.link_bw
+            )
+        else:
+            link = hw.link_bw
+        collective_s = coll / link
+
+        # ---- capacity ----
+        resident = ppc * (sbytes if train else BF16)
+        if train:
+            tl2 = shape.tokens / dp / n_mb
+            tp_vals = set(tp.tolist())
+            if len(tp_vals) == 1:
+                f_mult, m_mult = ctx.act_mults(next(iter(tp_vals)))
+                fm = np.full(n, f_mult)
+                mm = np.full(n, m_mult)
+            else:
+                fm = np.empty(n)
+                mm = np.empty(n)
+                for v in tp_vals:
+                    f_mult, m_mult = ctx.act_mults(v)
+                    mask = tp == v
+                    fm[mask] = f_mult
+                    mm[mask] = m_mult
+            d = cfg.d_model
+            stored_mult = np.where(
+                cols.remat == 2, float(d),
+                np.where(cols.remat == 1, d * 4 + mm * 0.5 + fm * 0.5,
+                         d * 6 + mm + fm),
+            )
+            stored = tl2 * stored_mult * ctx.n_periods()
+            logits = tl2 * cfg.vocab_size / np.where(cols.vocab_shard, tp, 1)
+            logits = np.where(cols.remat == 0, logits, 0.0)
+            act_res = stored * BF16 + logits * BF16
+        else:
+            act_res = 0.0
+        per_chip = resident + act_res + kv_col
+        feasible = per_chip <= hw.hbm_bytes * 0.92
+
+        step_s = np.maximum(compute_s, memory_s) + (1.0 - cols.overlap) * collective_s
+        step_s = np.where(
+            feasible, step_s, step_s * (100.0 * (1.0 + per_chip / hw.hbm_bytes))
+        )
+
+        n_active = ctx.active_param_count()
+        model_flops = (
+            6.0 * n_active * shape.tokens if train
+            else 2.0 * n_active * shape.tokens
+        )
+        mfu = model_flops / (step_s * chips * hw.peak_flops)
+        return {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "step_s": step_s,
+            "flops": flops,
+            "hbm_bytes": hbm_bytes,
+            "coll_bytes_per_chip": coll + np.zeros(n),
+            "hbm_per_chip": per_chip,
+            "feasible": feasible,
+            "model_flops": model_flops,
+            "eff": eff,
+            "mfu": mfu,
+            "parts": parts,
+        }
+
+    def _assemble_terms(self, out: dict, i: int) -> RooflineTerms:
+        """One plan's ``RooflineTerms`` from the kernel's column output —
+        the same fields (and the same ``details`` keys, in the same
+        insertion order) the scalar path produces."""
+        details = {
+            name: float(vals[i])
+            for name, mask, vals in out["parts"] if mask[i]
+        }
+        details["eff"] = float(out["eff"][i])
+        details["mfu"] = float(out["mfu"][i])
+        return RooflineTerms(
+            compute_s=float(out["compute_s"][i]),
+            memory_s=float(out["memory_s"][i]),
+            collective_s=float(out["collective_s"][i]),
+            step_s=float(out["step_s"][i]),
+            flops=float(out["flops"][i]),
+            hbm_bytes=float(out["hbm_bytes"][i]),
+            coll_bytes_per_chip=float(out["coll_bytes_per_chip"][i]),
+            hbm_per_chip=float(out["hbm_per_chip"][i]),
+            feasible=bool(out["feasible"][i]),
+            model_flops=float(out["model_flops"]),
+            details=details,
+        )
+
+    # ------------------------------------------------------------------
     def cost(self, plan: SchedulePlan) -> float:
-        """Scalar cost (estimated step seconds, with infeasibility penalty)."""
+        """Scalar cost (estimated step seconds, with infeasibility penalty).
+        Columnar mode routes through the same dispatch as ``cost_batch``
+        (a batch of one), so the scalar and batched signals cannot
+        drift."""
+        if self.columnar:
+            self.n_evals += 1
+            if self.columnar_min_batch <= 1:
+                cols = PlanColumns.from_plans([plan])
+                return float(
+                    self._terms_columnar(cols, self._ctx())["step_s"][0]
+                )
+            return self._terms_scalar(plan, self._ctx()).step_s
         return self.terms(plan).step_s
 
     def cost_batch(self, plans) -> List[float]:
         """Batched pricing: ``cost_batch(plans) == [cost(p) for p in plans]``,
         element-for-element and bit-for-bit.
 
-        The batch path amortizes two things a scalar sweep cannot:
+        Columnar mode encodes the unique plans once (``PlanColumns``) and
+        prices the whole batch in one vectorized kernel pass
+        (``_terms_columnar``); batches smaller than ``columnar_min_batch``
+        dispatch to the certified-identical scalar replay instead (column
+        dispatch overhead dominates there — see ``__init__``).  Duplicate
+        plans inside the batch — common when concurrent MCTS rollouts
+        collide on a schedule — are priced once (``n_evals`` counts each
+        *unique* evaluation once; values are unaffected).
 
-        * the plan-independent accounting (whole-model FLOPs, parameter
-          groups, per-layer multipliers, flash-VMEM geometry) lives in one
-          persistent ``_EvalContext`` instead of being recomputed per plan;
-        * duplicate plans inside the batch — common when concurrent MCTS
-          rollouts collide on a schedule — are priced once (``n_evals``
-          counts each *unique* evaluation once; values are unaffected).
-
-        Cross-plan vectorization stops at the context boundary on purpose:
-        the per-plan arithmetic must replay the scalar model's IEEE-754
-        operation sequence exactly, because bit-identity with the reference
-        engine is the certified contract of the whole engine layer."""
+        ``columnar=False`` replays the pre-columnar protocol: the scalar
+        arithmetic per unique plan, with the plan-independent accounting
+        amortized through one persistent ``_EvalContext``."""
+        if not plans:
+            return []
+        if self.columnar:
+            index: Dict[SchedulePlan, int] = {}
+            uniq: List[SchedulePlan] = []
+            for p in plans:
+                if p not in index:
+                    index[p] = len(uniq)
+                    uniq.append(p)
+            if len(uniq) >= self.columnar_min_batch:
+                step = self.cost_columns(PlanColumns.from_plans(uniq))
+            else:  # below the kernel crossover: skip the encode entirely
+                self.n_evals += len(uniq)
+                ctx = self._ctx()
+                step = [self._terms_scalar(p, ctx).step_s for p in uniq]
+            if len(uniq) == len(plans):
+                return step
+            return [step[index[p]] for p in plans]
         ctx = self._batch_ctx
         if ctx is None:
             ctx = self._batch_ctx = _EvalContext(self)
@@ -612,11 +1097,25 @@ class AnalyticCostModel:
             out.append(c)
         return out
 
+    def cost_columns(self, cols: PlanColumns) -> List[float]:
+        """Price an already-encoded batch — the seam the serving layer
+        uses so one ``PlanColumns`` encode feeds either the learned MLP or
+        this kernel.  No dedup here: callers hand deduplicated miss
+        batches (``CachedMDP``); every column is one evaluation."""
+        if not self.columnar:  # oracle mode: the pre-columnar replay
+            return self.cost_batch(cols.plans)
+        self.n_evals += cols.n
+        if cols.n < self.columnar_min_batch:
+            ctx = self._ctx()
+            return [self._terms_scalar(p, ctx).step_s for p in cols.plans]
+        step = self._terms_columnar(cols, self._ctx())["step_s"]
+        return [float(v) for v in step]
+
     def partial_cost(self, actions, space: ScheduleSpace) -> float:
         """The (unreliable) cost of an INCOMPLETE schedule: complete the
-        remaining stages with defaults and evaluate — this is exactly what
-        beam search must do at every depth, and what the paper shows is
-        misleading (Fig. 1/2)."""
+        remaining stages with defaults (memoized per space) and evaluate —
+        this is exactly what beam search must do at every depth, and what
+        the paper shows is misleading (Fig. 1/2)."""
         defaults = space.default_actions()
         full = list(actions) + defaults[len(actions):]
         return self.cost(space.plan_from_actions(full))

@@ -94,6 +94,7 @@ class ArrayMCTS:
         self._delta_base: Optional[int] = None
         self._delta_parents: List[int] = []
         self._delta_best: List[int] = []
+        self._delta_touched: List[int] = []
         self.root = self._new_node(-1, self.root_state)
 
     # -- storage management ------------------------------------------------
@@ -281,6 +282,11 @@ class ArrayMCTS:
         else:
             r = (self.baseline / cost) if cost > 0 else 0.0
         rec = self._delta_best if self._delta_base is not None else None
+        if rec is not None:
+            # pre-round nodes whose visit/sum stats this backprop touches:
+            # exactly what collect_delta must ship besides the new slices
+            base = self._delta_base
+            self._delta_touched.extend(n for n in path if n < base)
         if len(path) < 16:
             vc, sc, sr, bc = (
                 self.visit_counts, self.sum_cost, self.sum_reward, self.best_cost,
@@ -351,12 +357,14 @@ class ArrayMCTS:
 
     # -- per-round tree deltas (process-pool transport) ----------------------
     # A worker runs one decision round and ships back ONLY what the round
-    # changed, instead of pickling the whole tree: the flat stat arrays
-    # (compact numpy buffers), the python-side structure of the round's NEW
-    # nodes, and the point mutations to pre-round nodes (untried pools and
-    # child lists of expanded parents, improved best-states).  The master
-    # applies the delta to the tree object it kept, which reproduces the
-    # worker's post-round tree exactly — asserted by
+    # changed, instead of pickling the whole tree: the round's NEW node
+    # slices (``[base:size]`` stat/structure buffers), the stat rows of the
+    # round's TOUCHED pre-round nodes (the backprop paths — recorded during
+    # the round, so the numeric payload scales with the round, not with the
+    # total tree), and the point mutations to pre-round nodes (untried
+    # pools / child table rows of expanded parents, improved best-states).
+    # The master applies the delta to the tree object it kept, which
+    # reproduces the worker's post-round tree exactly — asserted by
     # tests/test_engine.py::test_parallel_delta_merge_equals_whole_tree.
 
     def begin_delta(self):
@@ -364,25 +372,43 @@ class ArrayMCTS:
         self._delta_base = self.size
         self._delta_parents = []
         self._delta_best = []
+        self._delta_touched = []
 
     def collect_delta(self) -> dict:
         """Package the recorded round as a picklable delta and stop
-        recording."""
+        recording.  Payload is a TRUE delta: ``[base:size]`` slices for
+        the round's new nodes plus the touched pre-round stat rows —
+        nothing proportional to the pre-round tree ships."""
         base = self._delta_base
         size = self.size
-        parents = {n for n in self._delta_parents if n < base}
+        parents = sorted({n for n in self._delta_parents if n < base})
         improved = {n for n in self._delta_best if n < base}
+        # every pre-round node whose numeric stats changed this round:
+        # backprop paths (visit/sum/best writes); expanded parents' stat
+        # changes are also backprop writes, so ``touched`` covers them
+        touched = np.fromiter(
+            sorted(set(self._delta_touched)), dtype=np.int64,
+        )
         delta = {
             "base": base,
             "size": size,
             "width": self.children.shape[1],
-            "visit_counts": self.visit_counts[:size].copy(),
-            "sum_cost": self.sum_cost[:size].copy(),
-            "sum_reward": self.sum_reward[:size].copy(),
-            "best_cost": self.best_cost[:size].copy(),
+            "visit_counts": self.visit_counts[base:size].copy(),
+            "sum_cost": self.sum_cost[base:size].copy(),
+            "sum_reward": self.sum_reward[base:size].copy(),
+            "best_cost": self.best_cost[base:size].copy(),
             "node_action": self.node_action[base:size].copy(),
-            "n_children": self.n_children[:size].copy(),
-            "children": self.children[:size].copy(),
+            "n_children": self.n_children[base:size].copy(),
+            "children": self.children[base:size].copy(),
+            "touched": touched,
+            "touched_visit": self.visit_counts[touched],
+            "touched_sum_cost": self.sum_cost[touched],
+            "touched_sum_reward": self.sum_reward[touched],
+            "touched_best_cost": self.best_cost[touched],
+            # expanded pre-round parents: their children-table rows gained
+            # slots this round (n_children rides along per parent)
+            "children_mut": {n: self.children[n].copy() for n in parents},
+            "n_children_mut": {n: int(self.n_children[n]) for n in parents},
             "untried_new": self.untried[base:],
             "childlist_new": self._childlist[base:],
             "best_state_new": self.best_state[base:],
@@ -399,6 +425,7 @@ class ArrayMCTS:
         self._delta_base = None
         self._delta_parents = []
         self._delta_best = []
+        self._delta_touched = []
         return delta
 
     def apply_delta(self, delta: dict):
@@ -411,16 +438,26 @@ class ArrayMCTS:
             )
         while self.visit_counts.shape[0] < size:
             self._grow_nodes()
-        if self.children.shape[1] < delta["width"]:
-            self._grow_width(delta["width"])
+        width = delta["width"]
+        if self.children.shape[1] < width:
+            self._grow_width(width)
         self.size = size
-        self.visit_counts[:size] = delta["visit_counts"]
-        self.sum_cost[:size] = delta["sum_cost"]
-        self.sum_reward[:size] = delta["sum_reward"]
-        self.best_cost[:size] = delta["best_cost"]
+        self.visit_counts[base:size] = delta["visit_counts"]
+        self.sum_cost[base:size] = delta["sum_cost"]
+        self.sum_reward[base:size] = delta["sum_reward"]
+        self.best_cost[base:size] = delta["best_cost"]
         self.node_action[base:size] = delta["node_action"]
-        self.n_children[:size] = delta["n_children"]
-        self.children[:size, : delta["width"]] = delta["children"]
+        self.n_children[base:size] = delta["n_children"]
+        self.children[base:size, :width] = delta["children"]
+        t = delta["touched"]
+        self.visit_counts[t] = delta["touched_visit"]
+        self.sum_cost[t] = delta["touched_sum_cost"]
+        self.sum_reward[t] = delta["touched_sum_reward"]
+        self.best_cost[t] = delta["touched_best_cost"]
+        for n, row in delta["children_mut"].items():
+            self.children[n, : row.shape[0]] = row
+        for n, v in delta["n_children_mut"].items():
+            self.n_children[n] = v
         self.untried.extend(delta["untried_new"])
         self._childlist.extend(delta["childlist_new"])
         self.best_state.extend(delta["best_state_new"])

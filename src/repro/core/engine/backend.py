@@ -15,7 +15,11 @@ evaluation (the default, differential-tested against the reference) or
 ``"reference"`` Node objects — and ``cost`` selects the serving layer of
 the cost stack (``"analytic"`` exact, ``"learned"``/``"hybrid"`` online
 learned-cost serving behind the transposition cache; see
-``repro.core.engine.serving``).
+``repro.core.engine.serving``).  Whichever backend runs, batch pricing
+below the seam is the columnar roofline kernel
+(``cost_model.PlanColumns`` + ``_terms_columnar``; docs/architecture.md
+§4) — bit-identical to the retained scalar oracle, so backend selection
+never changes search values.
 """
 from __future__ import annotations
 

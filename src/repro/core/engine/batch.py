@@ -15,9 +15,10 @@ prices it twice — values are unaffected, only ``n_evals`` drops.)  What change
 is the shape of the work: each lockstep step exposes K complete schedules
 to ONE ``terminal_cost_batch`` call (select-many → expand-many →
 evaluate-batch → backprop-many) instead of K interleaved scalar
-``terminal_cost`` calls, so duplicate leaves collapse and the cost model's
-plan-independent accounting amortizes across the batch
-(``AnalyticCostModel.cost_batch``).  Greedy rollout tails batch the same
+``terminal_cost`` calls, so duplicate leaves collapse and the round's
+deduplicated miss batch prices through one ``PlanColumns`` encode and one
+vectorized columnar-kernel pass (``AnalyticCostModel.cost_batch`` →
+``_terms_columnar``; bit-identical to the scalar walk by certification).  Greedy rollout tails batch the same
 way: each depth's candidate sweep prices through ``partial_cost_batch`` in
 one call, with the reference's tie-break RNG draws replayed afterwards in
 action order (evaluation consumes no RNG, so the stream is unchanged).

@@ -217,9 +217,12 @@ class CachedMDP:
     # order — a state appearing twice in one batch is one miss plus one
     # hit, exactly as if the batch had been priced sequentially.  A warm
     # cache therefore never changes returned values, only the hit count.
-    # With a cost backend mounted, the pricing layer is the backend (one
-    # learned forward pass or one analytic cost_batch per miss batch) and
-    # newly priced entries carry the serving model's version tag.
+    # The deduplicated miss batch is priced COLUMNAR-SIDE: it reaches the
+    # wrapped MDP's batch methods (one PlanColumns encode + one vectorized
+    # roofline-kernel pass per miss batch) or, with a cost backend
+    # mounted, the backend (which builds the same one-per-batch encoding
+    # and feeds it to the learned MLP or the analytic kernel); newly
+    # priced entries then carry the serving model's version tag.
 
     def _batch(self, states, tbl, vtbl, price) -> List[float]:
         out: List[Optional[float]] = [None] * len(states)

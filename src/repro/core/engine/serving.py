@@ -54,6 +54,8 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.cost_model import PlanColumns
+
 COST_MODES = ("analytic", "learned", "hybrid")
 
 
@@ -328,17 +330,37 @@ class HybridCostBackend:
         return h % self.audit_every == 0
 
     # -- pricing --------------------------------------------------------
+    # When the LEARNED model serves, the miss batch's plans are
+    # materialized once and encoded once as a PlanColumns
+    # structure-of-arrays — the same encoding the analytic columnar
+    # kernel prices, featurized directly by the MLP
+    # (learned_cost.featurize_columns), so the batch never re-walks the
+    # plan objects.  When the model does NOT serve (untrained, gate
+    # closed, audit batch), pricing goes straight to the MDP's analytic
+    # batch methods — they dedup default-completions and apply the cost
+    # model's own small-batch dispatch, so no encode is paid that the
+    # kernel would not use.  MDPs without the relevant seams (test
+    # doubles) take the scalar fallbacks unchanged.
+
+    def _serve_columns(self, m, cols) -> List[float]:
+        if hasattr(m, "cost_columns"):
+            return m.cost_columns(cols)
+        return m.cost_batch(cols.plans)
+
     def price_terminal(self, mdp, states: Sequence) -> Tuple[List[float], int]:
         """Price a deduplicated terminal miss batch; ONE model forward
-        pass when serving learned, one analytic ``cost_batch`` otherwise.
+        pass (over one ``PlanColumns`` encode) when serving learned, one
+        analytic ``terminal_cost_batch`` → columnar kernel otherwise.
         ~1/``audit_every`` of serving-era batches go analytic (see
         ``__init__``: the audit stream that keeps training alive)."""
         self.maybe_refit()
         m = self._serving_model()
         if m is not None and self.audit_batch(states):
             m = None  # audit batch: exact labels, untagged, harvestable
-        if m is not None:
-            costs = m.cost_batch([mdp.plan(s) for s in states])
+        plan = getattr(mdp, "plan", None)
+        if m is not None and plan is not None:
+            cols = PlanColumns.from_plans([plan(s) for s in states])
+            costs = self._serve_columns(m, cols)
             self.n_learned_batches += 1
             self.n_learned_plans += len(states)
             return costs, m.version
@@ -360,7 +382,8 @@ class HybridCostBackend:
         m = self._serving_model()
         completed = getattr(mdp, "completed_plans", None)
         if m is not None and completed is not None:
-            costs = m.cost_batch(completed(states))
+            cols = PlanColumns.from_plans(completed(states))
+            costs = self._serve_columns(m, cols)
             self.n_learned_batches += 1
             self.n_learned_plans += len(states)
             return costs, m.version

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost_model import AnalyticCostModel
+from repro.core.cost_model import AnalyticCostModel, PlanColumns
 from repro.core.space import SchedulePlan, ScheduleSpace
 
 
@@ -59,6 +59,26 @@ def featurize_batch(
     return np.stack([featurize(p, space) for p in plans])
 
 
+def featurize_columns(cols: PlanColumns, space: ScheduleSpace) -> np.ndarray:
+    """``featurize_batch`` from a ``PlanColumns`` encoding — element-for-
+    element equal to featurizing the plan objects (tested), built entirely
+    from the same structure-of-arrays the analytic columnar kernel prices.
+    This is what lets the serving layer encode a miss batch ONCE and hand
+    the encoding to whichever cost backend wins: the MLP featurizes the
+    columns, the analytic kernel prices them, no per-plan re-walk either
+    way."""
+    blocks: List[np.ndarray] = []
+    for stage in space.stages:
+        for onehot in cols.stage_onehots(stage):
+            blocks.append(onehot.astype(np.float32))
+    blocks.append(np.log2(cols.microbatches).astype(np.float32))
+    blocks.append(np.log2(cols.bq).astype(np.float32))
+    blocks.append(np.log2(cols.bkv).astype(np.float32))
+    blocks.append(np.log2(cols.scan_chunk).astype(np.float32))
+    blocks.append(cols.overlap.astype(np.float32))
+    return np.stack(blocks, axis=1)
+
+
 def _pad_len(n: int) -> int:
     """Next power of two ≥ n: bounds the jit compile-cache growth."""
     return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
@@ -84,10 +104,23 @@ class LearnedCostModel:
         float32 round-off (XLA may fuse the padded matmul differently per
         batch shape, so this seam — unlike the analytic ``cost_batch`` — is
         an approximate-parity contract, not a bit-exact one)."""
-        n = len(plans)
-        if n == 0:
+        if len(plans) == 0:
             return []
-        X = featurize_batch(plans, self.space)
+        return self._predict(featurize_batch(plans, self.space))
+
+    def cost_columns(self, cols: PlanColumns) -> List[float]:
+        """``cost_batch`` from a shared ``PlanColumns`` encoding (the
+        serving seam: one encode per miss batch, whichever backend
+        prices it).  Same values as ``cost_batch(cols.plans)`` — the
+        feature matrix is element-identical (``featurize_columns``)."""
+        if cols.n == 0:
+            return []
+        return self._predict(featurize_columns(cols, self.space))
+
+    def _predict(self, X: np.ndarray) -> List[float]:
+        """One jitted forward pass over a feature matrix, padded to the
+        next power of two so compiled shapes stay logarithmic."""
+        n = X.shape[0]
         pad = _pad_len(n)
         if pad > n:
             X = np.concatenate(
@@ -186,10 +219,12 @@ def train_learned_cost(
     seed: int = 0,
 ) -> LearnedCostModel:
     """Train on random complete schedules against the oracle's cost
-    (the paper trains against measured runtimes of random programs)."""
+    (the paper trains against measured runtimes of random programs).
+    Labels price through ``cost_batch`` — one columnar-kernel pass for
+    the whole training set, values identical to a scalar sweep."""
     rng = _random.Random(seed)
     plans = [space.random_plan(rng) for _ in range(n_samples)]
-    y = [oracle.cost(p) for p in plans]
+    y = oracle.cost_batch(plans)
     return fit_learned_cost(space, plans, y, steps=steps, lr=lr, seed=seed)
 
 
@@ -198,9 +233,14 @@ def ranking_correlation(
     n: int = 128, seed: int = 1, partial_depth: Optional[int] = None,
 ) -> float:
     """Spearman rank correlation model-vs-oracle on complete schedules, or on
-    partial prefixes (default-completed) when ``partial_depth`` is given."""
+    partial prefixes (default-completed) when ``partial_depth`` is given.
+
+    Both legs price through the batch seam (``cost_batch`` — one MLP
+    forward pass / one columnar kernel pass for all ``n`` samples), the
+    same path the fig-12 artifact and the serving layer exercise; models
+    without a batch entry point fall back to a scalar sweep."""
     rng = _random.Random(seed)
-    preds, golds = [], []
+    pred_plans, gold_plans = [], []
     for _ in range(n):
         actions = space.random_actions(rng)
         if partial_depth is not None:
@@ -209,12 +249,21 @@ def ranking_correlation(
             full_actions = prefix + defaults[len(prefix):]
             # the model scores its (misleading) default completion; the
             # oracle scores the TRUE eventual schedule (the random one)
-            preds.append(model.cost(space.plan_from_actions(full_actions)))
-            golds.append(oracle.cost(space.plan_from_actions(actions)))
+            pred_plans.append(space.plan_from_actions(full_actions))
+            gold_plans.append(space.plan_from_actions(actions))
         else:
             plan = space.plan_from_actions(actions)
-            preds.append(model.cost(plan))
-            golds.append(oracle.cost(plan))
+            pred_plans.append(plan)
+            gold_plans.append(plan)
+
+    def price(m, plans):
+        batch = getattr(m, "cost_batch", None)
+        if batch is not None:
+            return batch(plans)
+        return [m.cost(p) for p in plans]
+
+    preds = price(model, pred_plans)
+    golds = price(oracle, gold_plans)
     return _spearman(np.asarray(preds), np.asarray(golds))
 
 

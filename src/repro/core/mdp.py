@@ -58,8 +58,11 @@ class ScheduleMDP:
     # -- batched pricing (values identical to the scalar methods) ----------
     def terminal_cost_batch(self, states: Sequence[State]) -> list:
         """``[terminal_cost(s) for s in states]`` in one cost-model call.
-        Routes through ``cost_model.cost_batch`` when available (duplicate
-        states are then priced once); falls back to the scalar loop."""
+        Routes through ``cost_model.cost_batch`` when available — the
+        batch materializes its plans once and (columnar models) encodes
+        them once as ``PlanColumns`` for the vectorized roofline kernel;
+        duplicate states are priced once.  Falls back to the scalar
+        loop for cost models without a batch seam."""
         batch = getattr(self.cost_model, "cost_batch", None)
         if batch is None:
             return [self.terminal_cost(s) for s in states]
@@ -67,7 +70,10 @@ class ScheduleMDP:
 
     def partial_cost_batch(self, states: Sequence[State]) -> list:
         """``[partial_cost(s) for s in states]`` in one cost-model call
-        (terminal states price as terminal, like the scalar method)."""
+        (terminal states price as terminal, like the scalar method); the
+        default completions resolve against the space's memoized default
+        actions and the completed batch takes the same one-encode columnar
+        path as ``terminal_cost_batch``."""
         batch = getattr(self.cost_model, "cost_batch", None)
         if batch is None:
             return [self.partial_cost(s) for s in states]

@@ -93,6 +93,7 @@ class ScheduleSpace:
         self.shape = shape
         self.mesh = mesh
         self.stages: List[Stage] = self._build_stages()
+        self._default_actions: Optional[List[int]] = None
 
     # -- MDP geometry --------------------------------------------------------
     def _build_stages(self) -> List[Stage]:
@@ -169,14 +170,23 @@ class ScheduleSpace:
 
     def default_actions(self) -> List[int]:
         """The paper-faithful baseline plan's action indices (a sane default
-        schedule, analogous to Halide's master autoscheduler output)."""
-        base = _plan_defaults(self)
-        default = SchedulePlan(**base)
-        out = []
-        for s in self.stages:
-            want = getattr(default, s.name)
-            out.append(s.options.index(want) if want in s.options else 0)
-        return out
+        schedule, analogous to Halide's master autoscheduler output).
+
+        Memoized per space and returned by reference: the default
+        completion is the hot constant of every ``partial_cost`` — beam
+        and greedy sweeps call it at every depth — so rebuilding the
+        default ``SchedulePlan`` per call was pure overhead.  Treat the
+        returned list as read-only (every in-repo caller copies via
+        slicing/concatenation)."""
+        if self._default_actions is None:
+            base = _plan_defaults(self)
+            default = SchedulePlan(**base)
+            out = []
+            for s in self.stages:
+                want = getattr(default, s.name)
+                out.append(s.options.index(want) if want in s.options else 0)
+            self._default_actions = out
+        return self._default_actions
 
     def random_actions(self, rng: _random.Random) -> List[int]:
         return [rng.randrange(len(s.options)) for s in self.stages]

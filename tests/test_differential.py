@@ -17,10 +17,22 @@ the parity coverage required before ``engine="array"`` became the default
 in ``autotune`` / ``benchmarks.common.run_algo`` — any float drift, RNG
 reordering, or tie-break change in the array engine fails loudly here.
 
-All engines in one cell share a single ``CachedMDP``.  The cache is a pure
-memo (identical values cached or not), so it cannot mask a divergence — it
-only deduplicates pricing across the grid's hundreds of trajectories,
-keeping the harness inside the tier-1 budget.
+The same grid also certifies the COLUMNAR PRICING KERNEL: a fourth leg
+drives the batched engine over an MDP priced by the pre-columnar scalar
+oracle (``AnalyticCostModel(columnar=False)``) while the other three legs
+price through the column kernel with the small-batch dispatch disabled
+(``columnar_min_batch=1`` — every batch, including every batch of one,
+runs the vectorized kernel).  Identical trajectories mean the kernel
+reproduces the scalar arithmetic bit-for-bit on every schedule the search
+visits; any rounding difference would flip a UCB comparison somewhere in
+the grid and fail loudly.
+
+Engines sharing a pricing mode share a single ``CachedMDP`` per cell (the
+two pricing modes get SEPARATE caches, so a cached value from one can
+never mask a divergence in the other).  The cache is a pure memo
+(identical values cached or not) — it only deduplicates pricing across
+the grid's hundreds of trajectories, keeping the harness inside the
+tier-1 budget.
 """
 import pytest
 
@@ -42,17 +54,27 @@ CELLS = {
 _SHARED = {}
 
 
-def _mdp(cell: str) -> CachedMDP:
-    """One shared (cached) MDP per cell for the whole module."""
-    if cell not in _SHARED:
+def _mdp(cell: str, pricing: str = "columnar") -> CachedMDP:
+    """One shared (cached) MDP per (cell, pricing mode) for the module.
+
+    ``columnar`` forces every batch — every batch of ONE included —
+    through the vectorized kernel (``columnar_min_batch=1``); ``scalar``
+    is the pre-columnar per-plan oracle.  Separate caches per mode, so
+    the memo cannot cross-feed values between the paths under test."""
+    key = (cell, pricing)
+    if key not in _SHARED:
         arch, shape_name = CELLS[cell]
         cfg = get_config(arch).reduced()
         shape = get_shape(shape_name)
         space = ScheduleSpace(cfg, shape, SINGLE_POD)
-        _SHARED[cell] = CachedMDP(
-            ScheduleMDP(space, AnalyticCostModel(cfg, shape, SINGLE_POD))
-        )
-    return _SHARED[cell]
+        if pricing == "columnar":
+            cm = AnalyticCostModel(
+                cfg, shape, SINGLE_POD, columnar=True, columnar_min_batch=1
+            )
+        else:
+            cm = AnalyticCostModel(cfg, shape, SINGLE_POD, columnar=False)
+        _SHARED[key] = CachedMDP(ScheduleMDP(space, cm))
+    return _SHARED[key]
 
 
 def _drive(tree, batched: bool = False, mdp=None):
@@ -93,6 +115,12 @@ def test_engines_identical_across_grid(ucb, simulation, reward, seed, cell):
     bat = _drive(ArrayMCTS(mdp, cfg), batched=True, mdp=mdp)
     assert arr == ref, "scalar array engine diverged from reference"
     assert bat == ref, "batched array engine diverged from reference"
+    # columnar-vs-scalar pricing leg: the batched engine over the
+    # pre-columnar scalar oracle must reproduce the kernel-priced
+    # trajectory exactly — bit-identical pricing, certified on the grid
+    mdp_s = _mdp(cell, "scalar")
+    sca = _drive(ArrayMCTS(mdp_s, cfg), batched=True, mdp=mdp_s)
+    assert sca == ref, "scalar-oracle pricing diverged from columnar kernel"
 
 
 # ---------------------------------------------------------------------------

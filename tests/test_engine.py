@@ -142,7 +142,19 @@ def test_parallel_delta_merge_equals_whole_tree():
     worker = pickle.loads(pickle.dumps(master))  # ship to the worker
     worker.begin_delta()
     res_w = worker.run_decision()
-    wire = pickle.dumps(worker.collect_delta())
+    delta = worker.collect_delta()
+    # TRUE delta: the numeric payload is the round's new-node slices plus
+    # the round's touched pre-round stat rows — never the whole [:size]
+    # arrays (that O(total tree) copy was the ROADMAP item this replaces)
+    base, size = delta["base"], delta["size"]
+    assert base > 16  # the warm-up rounds grew a real pre-round tree
+    for name in ("visit_counts", "sum_cost", "sum_reward", "best_cost",
+                 "node_action", "n_children"):
+        assert len(delta[name]) == size - base, name
+    assert delta["children"].shape[0] == size - base
+    assert 0 < len(delta["touched"]) < base  # paths only, not every node
+    assert (delta["touched"] < base).all()
+    wire = pickle.dumps(delta)
     master.apply_delta(pickle.loads(wire))  # return trip
 
     assert master.size == worker.size

@@ -60,17 +60,23 @@ def test_action_sequences_roundtrip(c, seed):
 
 @st.composite
 def plan_batch(draw):
-    """A (space, model, plans) triple with arbitrary plans — duplicates
-    injected deliberately, since concurrent rollouts collide on schedules."""
-    arch = draw(st.sampled_from(["granite-3-2b", "granite-moe-1b-a400m"]))
+    """A (cfg, shape, mesh, space, plans) tuple with arbitrary plans —
+    duplicates injected deliberately, since concurrent rollouts collide
+    on schedules; the mesh is sampled too, so the columnar kernel's
+    multi-pod branches (pod-scaled dp, pod-link bandwidth blending) get
+    certified alongside the single-pod ones."""
+    arch = draw(st.sampled_from(
+        ["granite-3-2b", "granite-moe-1b-a400m", "falcon-mamba-7b"]
+    ))  # dense attn / MoE / SSM — every kernel branch family
     shape_name = draw(st.sampled_from(["train_4k", "decode_32k"]))
+    mesh = draw(st.sampled_from([SINGLE_POD, MULTI_POD]))
     cfg, shape = get_config(arch).reduced(), get_shape(shape_name)
-    space = ScheduleSpace(cfg, shape, SINGLE_POD)
+    space = ScheduleSpace(cfg, shape, mesh)
     seeds = draw(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=6))
     plans = [space.random_plan(random.Random(s)) for s in seeds]
     if draw(st.booleans()):
         plans = plans + plans[: draw(st.integers(1, len(plans)))]
-    return cfg, shape, space, plans
+    return cfg, shape, mesh, space, plans
 
 
 @SETTINGS
@@ -78,9 +84,11 @@ def plan_batch(draw):
 def test_cost_batch_equals_scalar_sweep(batch):
     """The batch-pricing contract: ``cost_batch(plans)`` returns EXACTLY
     ``[cost(p) for p in plans]`` — element order preserved, duplicates
-    included, floats compared with ``==`` (bit-identity, not tolerance)."""
-    cfg, shape, space, plans = batch
-    cm = AnalyticCostModel(cfg, shape, SINGLE_POD)
+    included, floats compared with ``==`` (bit-identity, not tolerance).
+    Held by the default (columnar, size-dispatched) model on random
+    batches of both cell kinds."""
+    cfg, shape, mesh, space, plans = batch
+    cm = AnalyticCostModel(cfg, shape, mesh)
     scalar = [cm.cost(p) for p in plans]
     batched = cm.cost_batch(plans)
     assert batched == scalar
@@ -93,10 +101,47 @@ def test_cost_batch_equals_scalar_sweep(batch):
 
 
 @SETTINGS
+@given(plan_batch())
+def test_columnar_kernel_equals_scalar_oracle(batch):
+    """The columnar refactor's load-bearing property: the vectorized
+    kernel (forced via ``columnar_min_batch=1`` so even batches of one run
+    column math) and the pre-columnar scalar oracle (``columnar=False``)
+    price every random batch bit-identically — ``cost``, ``cost_batch``
+    (duplicates included), and every ``terms`` field down to the
+    ``details`` dict."""
+    cfg, shape, mesh, space, plans = batch
+    kern = AnalyticCostModel(
+        cfg, shape, mesh, columnar=True, columnar_min_batch=1
+    )
+    oracle = AnalyticCostModel(cfg, shape, mesh, columnar=False)
+    want = [oracle.cost(p) for p in plans]
+    assert kern.cost_batch(plans) == want
+    assert [kern.cost(p) for p in plans] == want
+    assert kern.terms(plans[0]).to_dict() == oracle.terms(plans[0]).to_dict()
+
+
+@SETTINGS
+@given(plan_batch())
+def test_featurize_columns_matches_featurize_batch(batch):
+    """The shared-encoding seam: featurizing a ``PlanColumns`` batch for
+    the learned model produces the SAME float32 matrix as featurizing the
+    plan objects — the serving layer's one-encode-per-batch guarantee."""
+    from repro.core.cost_model import PlanColumns
+    from repro.core.learned_cost import featurize_batch, featurize_columns
+
+    cfg, shape, mesh, space, plans = batch
+    cols = PlanColumns.from_plans(plans)
+    a = featurize_batch(plans, space)
+    b = featurize_columns(cols, space)
+    assert a.dtype == b.dtype and a.shape == b.shape
+    assert (a == b).all()
+
+
+@SETTINGS
 @given(plan_batch(), st.floats(0.05, 0.5), st.integers(0, 10**6))
 def test_noisy_cost_batch_equals_scalar_sweep(batch, sigma, seed):
-    cfg, shape, space, plans = batch
-    noisy = NoisyCostModel(AnalyticCostModel(cfg, shape, SINGLE_POD), sigma, seed)
+    cfg, shape, mesh, space, plans = batch
+    noisy = NoisyCostModel(AnalyticCostModel(cfg, shape, mesh), sigma, seed)
     assert noisy.cost_batch(plans) == [noisy.cost(p) for p in plans]
 
 

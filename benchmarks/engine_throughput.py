@@ -17,6 +17,14 @@ comparison:
   miss batches priced by the COLUMNAR roofline kernel
   (``PlanColumns`` + ``_terms_columnar``, one vectorized pass per batch).
 
+A ``parallel`` leg rides along per cell: the default array engine run
+through the persistent pinned process pool (``engine/workers.py``) at the
+same budgets, reporting wall clock against the sequential leg plus the
+DETERMINISTIC payload-byte counters — submit/return bytes per round, the
+one-time init snapshot, and the steady-state forward-delta size — that
+pin the O(round) transport claim (the pre-pinning pool re-pickled every
+tree and the whole cache on every submit).
+
 A cost-kernel microbenchmark rides along per cell (``kernel_*`` columns):
 one deduplicated batch of random unique plans priced scalar-batched vs
 columnar, isolating the kernel win from engine bookkeeping — at Table-1
@@ -70,6 +78,19 @@ CELLS = [
 # regression (e.g. the kernel engaging where it loses badly).
 COLUMNAR_LEG_FLOOR = 0.5
 KERNEL_BATCH = 256  # microbench batch: a Table-1 first-round miss burst
+
+# parallel-leg gates.  The BYTE gates are deterministic (pickled sizes for
+# fixed seeds) and carry the O(round) claim: consecutive steady-state
+# rounds within a constant factor, and no round's forward delta anywhere
+# near the init snapshot (what the stateless pool used to re-ship every
+# round).  The WALL gate is best-of-reps with a generous ratio plus an
+# absolute floor — this box's timings swing ±10-20%, and on few-core CI
+# runners the pool can legitimately sit near parity with sequential — so
+# it only catches a catastrophic regression (e.g. the submit side
+# re-growing with the tree).
+PARALLEL_ROUND_RATIO = 4.0      # consecutive steady-state submit rounds
+PARALLEL_WALL_RATIO = 4.0       # parallel may not be > 4x slower ...
+PARALLEL_WALL_FLOOR_S = 5.0     # ... unless both legs are under 5s anyway
 
 
 def run_ensemble(cell, engine: str, *, iters: int, n_standard: int,
@@ -130,6 +151,54 @@ def _timed(fn) -> float:
     t0 = time.perf_counter()
     fn()
     return time.perf_counter() - t0
+
+
+def bench_parallel(cell, *, iters: int, n_standard: int, n_greedy: int,
+                   reps: int = 2) -> dict:
+    """Sequential vs pinned-pool legs at the same budgets (leg order
+    rotates across reps; best-of-reps per leg), plus the payload-byte
+    counters — deterministic for a fixed seed — that measure the O(round)
+    submit claim."""
+    best = {}
+    for rep in range(max(reps, 1)):
+        legs = [("seq", False), ("par", True)]
+        if rep % 2:
+            legs.reverse()
+        for name, flag in legs:
+            got = run_ensemble(cell, "array", iters=iters,
+                               n_standard=n_standard, n_greedy=n_greedy,
+                               parallel=flag)
+            if name not in best or got[2] < best[name][2]:
+                best[name] = got
+    res_s, _, wall_s = best["seq"]
+    res_p, it_p, wall_p = best["par"]
+    b = res_p.submit_bytes_rounds
+    steady = b[-2:] if len(b) >= 2 else b  # cache-warm rounds
+    out = {
+        "parallel_wall_s": wall_p,
+        "parallel_iters_per_sec": it_p / wall_p,
+        "speedup_parallel_vs_sequential": wall_s / wall_p,
+        "parallel_submit_bytes": res_p.submit_bytes,
+        "parallel_return_bytes": res_p.return_bytes,
+        "parallel_snapshot_bytes": res_p.snapshot_bytes,
+        "parallel_submit_bytes_rounds": b,
+        "parallel_return_bytes_rounds": res_p.return_bytes_rounds,
+        # consecutive steady-state rounds: the constant-factor claim
+        "parallel_submit_round_ratio": (
+            max(steady) / max(min(steady), 1) if len(steady) == 2 else 1.0
+        ),
+        # worst round's forward delta vs the init snapshot — the
+        # pre-pinning pool shipped the snapshot (or more) EVERY round
+        "parallel_max_round_vs_snapshot": (
+            max(b) / max(res_p.snapshot_bytes, 1) if b else 0.0
+        ),
+        "parallel_restarts": res_p.n_worker_restarts,
+        "parallel_same_result": (
+            res_s.plan == res_p.plan and res_s.cost == res_p.cost
+            and [d["action"] for d in res_s.decisions]
+            == [d["action"] for d in res_p.decisions]),
+    }
+    return out
 
 
 LEGS = [
@@ -196,6 +265,8 @@ def bench_cell(cell, *, iters: int, n_standard: int, n_greedy: int,
         == [d["action"] for d in res_bat.decisions]
         == [d["action"] for d in res_arr.decisions])
     out.update(bench_kernel(cell))
+    out.update(bench_parallel(cell, iters=iters, n_standard=n_standard,
+                              n_greedy=n_greedy, reps=max(reps - 1, 2)))
 
     name = out["cell"]
     csv_line(f"engine_throughput[{name}][reference]", wall_ref * 1e6,
@@ -206,6 +277,15 @@ def bench_cell(cell, *, iters: int, n_standard: int, n_greedy: int,
              f"{out['array_batched_iters_per_sec']:.0f} it/s")
     csv_line(f"engine_throughput[{name}][array+columnar]", wall_arr * 1e6,
              f"{out['array_iters_per_sec']:.0f} it/s")
+    csv_line(f"engine_throughput[{name}][array+parallel]",
+             out["parallel_wall_s"] * 1e6,
+             f"{out['parallel_iters_per_sec']:.0f} it/s; "
+             f"{out['speedup_parallel_vs_sequential']:.2f}x vs sequential; "
+             f"submit/round steady "
+             f"{out['parallel_submit_bytes_rounds'][-2:]}, snapshot "
+             f"{out['parallel_snapshot_bytes']}B shipped once "
+             f"(was: every round); restarts={out['parallel_restarts']}; "
+             f"same={out['parallel_same_result']}")
     csv_line(f"engine_throughput_kernel[{name}]",
              out["kernel_columnar_us_per_plan"],
              f"{out['kernel_speedup']:.2f}x columnar-vs-scalar on "
@@ -270,9 +350,38 @@ if __name__ == "__main__":
                 f"{rows[0]['cell']}: columnar leg regressed end-to-end "
                 f"({rows[0]['speedup_columnar_vs_batched']:.2f}x < "
                 f"{COLUMNAR_LEG_FLOOR})")
+        # pinned-pool gates on the decode cell.  Byte gates first — they
+        # are DETERMINISTIC (pickled sizes for fixed seeds), so they can
+        # be tight; the wall gate is best-of-reps with a ratio + absolute
+        # floor because timings on this class of box swing ±10-20%.
+        r0 = rows[0]
+        if not r0["parallel_same_result"]:
+            bad.append(f"{r0['cell']}: parallel diverged from sequential")
+        if r0["parallel_restarts"]:
+            bad.append(
+                f"{r0['cell']}: {r0['parallel_restarts']} unexpected "
+                f"worker restarts")
+        if r0["parallel_submit_round_ratio"] > PARALLEL_ROUND_RATIO:
+            bad.append(
+                f"{r0['cell']}: steady-state submit rounds diverged "
+                f"({r0['parallel_submit_round_ratio']:.2f}x > "
+                f"{PARALLEL_ROUND_RATIO}) — submit payload no longer "
+                f"round-sized")
+        if r0["parallel_max_round_vs_snapshot"] >= 1.0:
+            bad.append(
+                f"{r0['cell']}: a forward delta reached snapshot size "
+                f"({r0['parallel_max_round_vs_snapshot']:.2f}x) — the "
+                f"submit side is re-shipping whole state")
+        if (r0["speedup_parallel_vs_sequential"] < 1.0 / PARALLEL_WALL_RATIO
+                and r0["parallel_wall_s"] > PARALLEL_WALL_FLOOR_S):
+            bad.append(
+                f"{r0['cell']}: parallel leg catastrophically slow "
+                f"({r0['speedup_parallel_vs_sequential']:.2f}x of "
+                f"sequential over {r0['parallel_wall_s']:.2f}s)")
         if bad:
             print("# CHECK FAILED: " + "; ".join(bad))
             sys.exit(1)
         print("# check passed: array >= reference, columnar kernel >= "
               "scalar replay, columnar leg holds the batched leg, all "
-              "legs identical on the decode cell")
+              "legs identical on the decode cell, and the pinned pool "
+              "matched sequential with round-sized submit payloads")

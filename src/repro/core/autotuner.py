@@ -111,6 +111,7 @@ def autotune(
     cache: Optional[bool] = None,
     batch: Optional[bool] = None,
     cost: str = "analytic",
+    n_workers: Optional[int] = None,
 ) -> TuneResult:
     """Tune one (arch × shape × mesh) cell.
 
@@ -118,11 +119,15 @@ def autotune(
     vectorized ``"array"`` engine with batched leaf evaluation and the
     shared transposition cache, certified bit-identical to the paper-
     faithful ``"reference"`` engine by ``tests/test_differential.py``;
-    ``parallel`` runs ensemble trees in a process pool; ``cache`` forces
-    the shared transposition cache on/off (default: on for the array
-    engine); ``batch`` forces lockstep batched leaf evaluation on/off
-    (default: on for the array engine).  All algorithms dispatch through
-    the ``SearchBackend`` protocol (``repro.core.engine.backend``).
+    ``parallel`` runs ensemble trees across persistent pinned worker
+    processes (``repro.core.engine.workers``; per-round deltas in both
+    directions, payload bytes surfaced on ``TuneResult``, ``n_workers``
+    caps the pool — default one worker per core up to the tree count);
+    ``cache`` forces the shared transposition cache on/off (default: on
+    for the array engine); ``batch`` forces lockstep batched leaf
+    evaluation on/off (default: on for the array engine).  All algorithms
+    dispatch through the ``SearchBackend`` protocol
+    (``repro.core.engine.backend``).
 
     ``cost`` selects the serving layer of the cost stack for MCTS runs:
     ``"analytic"`` (default — exact, bit-identical to the certified PR-2
@@ -145,5 +150,6 @@ def autotune(
         cache=cache,
         batch=batch,
         cost=cost,
+        n_workers=n_workers,
     )
     return res

@@ -36,6 +36,14 @@ Plus the shared ``TranspositionCache`` / ``CachedMDP`` that memoizes
 decision rounds, and the ``SearchBackend`` protocol (see ``backend.py``)
 that ``autotune`` routes every algorithm through.
 
+Parallel execution (``workers.py``): ``parallel=True`` runs ensemble
+rounds on PERSISTENT PINNED worker processes — each worker holds its
+trees and a serve-only ``CachedMDP`` for the whole run, and per-round
+traffic is a delta in both directions (root-advance + incremental cache
+export + generation-keyed model params forward; the ``ArrayMCTS`` round
+delta back), with payload bytes counted at the pickle boundary and
+worker-death resync from the master's canonical trees.
+
 Learned-cost serving (``serving.py``): ``cost="analytic"|"learned"|"hybrid"``
 on ``autotune`` / ``ProTuner`` / ``resolve_backend`` mounts a
 ``HybridCostBackend`` inside ``CachedMDP`` — an ``OnlineCostTrainer``
@@ -55,6 +63,7 @@ from repro.core.engine.serving import (
     OnlineCostTrainer,
     make_cost_backend,
 )
+from repro.core.engine.workers import PinnedWorkerPool
 
 ENGINES = ("reference", "array")
 
@@ -73,6 +82,7 @@ def make_tree(mdp, config, engine: str = "reference"):
 __all__ = [
     "ArrayMCTS",
     "CachedMDP",
+    "PinnedWorkerPool",
     "TranspositionCache",
     "COST_MODES",
     "HybridCostBackend",

@@ -366,6 +366,10 @@ class ArrayMCTS:
     # The master applies the delta to the tree object it kept, which
     # reproduces the worker's post-round tree exactly — asserted by
     # tests/test_engine.py::test_parallel_delta_merge_equals_whole_tree.
+    # This is the REVERSE direction of the pinned-worker protocol
+    # (engine/workers.py); the forward direction needs no tree payload at
+    # all — the master's root-synchronization action is replayed through
+    # ``advance_root``, which both sides apply to identical trees.
 
     def begin_delta(self):
         """Start recording a round's mutations (worker side)."""
@@ -488,3 +492,18 @@ class ArrayMCTS:
     @property
     def done(self) -> bool:
         return self.mdp.is_terminal(self.root_state)
+
+
+def delta_nbytes(delta: dict) -> int:
+    """Numeric payload of a collected round delta, in bytes — the array
+    buffers that dominate the wire size (new-node slices, touched stat
+    rows, expanded parents' child-table rows).  Payload accounting for the
+    O(new nodes + touched rows) transport claim: this number scales with
+    the ROUND, while ``pickle.dumps(tree)`` scales with the whole tree."""
+    n = 0
+    for v in delta.values():
+        if isinstance(v, np.ndarray):
+            n += v.nbytes
+    for row in delta["children_mut"].values():
+        n += row.nbytes
+    return n

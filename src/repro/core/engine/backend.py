@@ -20,6 +20,12 @@ below the seam is the columnar roofline kernel
 (``cost_model.PlanColumns`` + ``_terms_columnar``; docs/architecture.md
 §4) — bit-identical to the retained scalar oracle, so backend selection
 never changes search values.
+
+Execution options flow through ``**opts`` untouched: ``parallel=True``
+runs MCTS ensembles on the persistent pinned worker pool
+(``repro.core.engine.workers`` — per-round deltas in both directions,
+payload bytes surfaced on ``TuneResult``), ``n_workers`` caps that pool,
+and non-MCTS backends simply ignore both.
 """
 from __future__ import annotations
 

@@ -27,9 +27,15 @@ multi-process caches interpretable.
 """
 from __future__ import annotations
 
+import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 State = Tuple[int, ...]
+
+# incremental-export cursor: (mutation epoch, len(terminal), len(partial),
+# len(terminal_version), len(partial_version)) — see
+# TranspositionCache.watermark/export_since
+Watermark = Tuple[int, int, int, int, int]
 
 
 class TranspositionCache:
@@ -39,7 +45,7 @@ class TranspositionCache:
 
     __slots__ = (
         "terminal", "partial", "terminal_version", "partial_version",
-        "hits", "misses",
+        "hits", "misses", "epoch",
     )
 
     def __init__(self):
@@ -51,6 +57,13 @@ class TranspositionCache:
         self.partial_version: Dict[State, int] = {}
         self.hits = 0
         self.misses = 0
+        # mutation epoch: bumped whenever the tables stop being append-only
+        # (an eviction, or an in-place value/tag change during a merge) —
+        # any outstanding export watermark from an older epoch is then
+        # invalid and ``export_since`` falls back to a full export.  Pure
+        # appends and re-inserts of identical values never bump it, so the
+        # analytic path stays incremental forever.
+        self.epoch = 0
 
     # -- stats ---------------------------------------------------------
     @property
@@ -92,9 +105,9 @@ class TranspositionCache:
         self.partial_version = state.get("partial_version", {})
         self.hits = 0
         self.misses = 0
+        self.epoch = 0
 
-    @staticmethod
-    def _merge_tbl(tbl, vtbl, new, vnew) -> None:
+    def _merge_tbl(self, tbl, vtbl, new, vnew) -> None:
         """Fold ``new`` entries (with tags ``vnew``) into ``tbl``/``vtbl``
         under the EXACT-WINS rule: an existing untagged (exact analytic)
         entry is never overwritten by a learned prediction, and an
@@ -103,19 +116,32 @@ class TranspositionCache:
         model, one auditing analytically — and exact must win regardless
         of merge order.  (Two *predictions* of the same state from
         different model generations resolve last-writer-wins; callers
-        merge in tree-index order, so that too is deterministic.)"""
+        merge in tree-index order, so that too is deterministic.)
+
+        Epoch accounting: overwriting an EXISTING key with a different
+        value or tag mutates the table in place (the key keeps its dict
+        position), which invalidates any outstanding length-based export
+        watermark — that bumps ``epoch``.  Appending new keys, or
+        re-inserting a key with its identical exact value (the pure-
+        analytic fast path — the memo is a pure function of the state, so
+        every worker computes the same float), keeps watermarks valid."""
         if not vtbl and not vnew:
             tbl.update(new)  # pure-analytic fast path: everything is exact
             return
+        changed = False
         for s, c in new.items():
             if s in tbl and s not in vtbl:
                 continue  # existing exact entry wins
-            tbl[s] = c
             v = vnew.get(s)
+            if s in tbl and (tbl[s] != c or vtbl.get(s) != v):
+                changed = True  # in-place rewrite: watermarks go stale
+            tbl[s] = c
             if v is None:
                 vtbl.pop(s, None)  # incoming exact clears any stale tag
             else:
                 vtbl[s] = v
+        if changed:
+            self.epoch += 1
 
     def merge(self, other: "TranspositionCache") -> None:
         """Fold a worker-side cache back into this one.  With no learned
@@ -128,6 +154,70 @@ class TranspositionCache:
                         other.partial, other.partial_version)
         self.hits += other.hits
         self.misses += other.misses
+
+    # -- incremental export (pinned-worker forward deltas) -------------
+    # The pinned process-pool protocol ships each worker ONLY the cache
+    # entries it has not seen yet: the master takes a per-worker
+    # ``watermark()`` at every submit and sends ``export_since(wm)`` the
+    # next round.  Dicts are insertion-ordered and (absent evictions and
+    # in-place rewrites) append-only, so "everything since" is a pair of
+    # islices — O(new entries), never a whole-table diff.  The mutation
+    # ``epoch`` guards the exceptional cases: a refit eviction or an
+    # exact-wins rewrite invalidates length-based cursors, and the next
+    # export for every worker degrades to a full-table resync exactly
+    # once (the analytic path never bumps the epoch, so it exports
+    # incrementally forever).
+
+    def watermark(self) -> Watermark:
+        """Cursor for ``export_since``: the current mutation epoch plus
+        the four table lengths."""
+        return (self.epoch, len(self.terminal), len(self.partial),
+                len(self.terminal_version), len(self.partial_version))
+
+    def export_since(self, wm: Optional[Watermark]):
+        """Entries added since ``wm`` as ``((terminal, partial,
+        terminal_version, partial_version), full)``.  ``full=True`` means
+        the watermark was missing or from an older mutation epoch and the
+        export is a complete snapshot (receivers should evict any locally
+        tagged entries the snapshot no longer certifies — see
+        ``HybridCostBackend.apply_params``)."""
+        if wm is None or wm[0] != self.epoch:
+            return (
+                (dict(self.terminal), dict(self.partial),
+                 dict(self.terminal_version), dict(self.partial_version)),
+                True,
+            )
+        return (
+            (dict(itertools.islice(self.terminal.items(), wm[1], None)),
+             dict(itertools.islice(self.partial.items(), wm[2], None)),
+             dict(itertools.islice(self.terminal_version.items(), wm[3], None)),
+             dict(itertools.islice(self.partial_version.items(), wm[4], None))),
+            False,
+        )
+
+    def apply_export(self, entries, full: bool = False) -> None:
+        """Fold an ``export_since`` payload into this cache (worker side
+        of the forward delta).  Merging — not replacing — under the same
+        exact-wins rule as ``merge``, so applying a full resync on top of
+        local state is always safe."""
+        t, p, tv, pv = entries
+        self._merge_tbl(self.terminal, self.terminal_version, t, tv)
+        self._merge_tbl(self.partial, self.partial_version, p, pv)
+
+    def evict_learned(self) -> int:
+        """Drop every learned-tagged entry (master refit superseded them;
+        they reprice on next lookup).  Bumps the mutation epoch: exports
+        can no longer be expressed as table-length islices."""
+        n = len(self.terminal_version) + len(self.partial_version)
+        if n:
+            for s in self.terminal_version:
+                del self.terminal[s]
+            self.terminal_version.clear()
+            for s in self.partial_version:
+                del self.partial[s]
+            self.partial_version.clear()
+            self.epoch += 1
+        return n
 
 
 class CachedMDP:

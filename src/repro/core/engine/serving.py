@@ -303,13 +303,39 @@ class HybridCostBackend:
 
     @staticmethod
     def _evict_learned(cache) -> None:
-        for tbl, vtbl in (
-            (cache.terminal, cache.terminal_version),
-            (cache.partial, cache.partial_version),
-        ):
-            for s in vtbl:
-                del tbl[s]
-            vtbl.clear()
+        cache.evict_learned()
+
+    # -- fit-generation-keyed param shipping (pinned workers) ----------
+    # Pinned process-pool workers hold this backend for the whole run, so
+    # the master ships model parameters ONLY when the fit generation
+    # changes — nothing rides on the wire between refits (the pre-pinning
+    # pool re-pickled the entire backend, trainer and all, every round).
+
+    def params_delta(self, known_version: int):
+        """What a worker holding fit generation ``known_version`` needs:
+        ``None`` while the generation is unchanged, else ``(version,
+        confident, model)`` — the serving verdict and the warm model
+        (params + normalization) of the current generation."""
+        t = self.trainer
+        if t.version == known_version:
+            return None
+        return (t.version, t.confident, t.model)
+
+    def apply_params(self, delta) -> None:
+        """Worker side: install a shipped fit generation.  Mirrors the
+        master's refit eviction first — the local cache may hold
+        predictions tagged by the superseded generation, and the master
+        already evicted its copies, so they must not keep serving as
+        hits.  Until this call arrives, the worker keeps serving the old
+        model (bit-identity with the sequential learned path is not a
+        contract; the ANALYTIC parallel path never mounts a backend)."""
+        version, confident, model = delta
+        if self.cache is not None:
+            self.cache.evict_learned()
+        t = self.trainer
+        t.version = version
+        t.confident = confident
+        t.model = model
 
     def _serving_model(self):
         m = self.trainer.model

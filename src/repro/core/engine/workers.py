@@ -1,0 +1,390 @@
+"""Persistent pinned process-pool workers for the parallel ensemble.
+
+The pre-pinning pool (`ProcessPoolExecutor.submit(fn, tree)`) made the
+worker→master *return* trip a true per-round delta (PR 2/4), but every
+submit still pickled each whole ``ArrayMCTS`` — flat node arrays that grow
+every round — plus the shared ``CachedMDP`` (the full transposition cache
+and the serve-only cost backend).  The submit payload therefore grew with
+the tree, not the round, and the pool kept losing to sequential below ~4
+cores.
+
+This module makes the submit side a per-round delta too.  Each worker
+process is PINNED: it holds its subset of the ensemble's trees (keyed by
+tree index) and one serve-only ``CachedMDP`` for the whole run, installed
+once by an ``init`` snapshot.  Every subsequent round the master submits
+only a FORWARD DELTA:
+
+* ``advance`` — the previous round's root-synchronization action (the
+  worker applies it to each pinned tree with ``advance_root``, exactly as
+  the master did to its canonical copies);
+* ``cache`` — the sibling trees' new transposition-cache entries since
+  this worker's last submit, exported incrementally from the master's
+  merged cache (``TranspositionCache.export_since`` against a per-worker
+  watermark) so the shared-cache hit rate is preserved without ever
+  re-shipping the table;
+* ``params`` — learned-model parameters, ONLY when the master's fit
+  generation changed (``HybridCostBackend.params_delta``); workers keep
+  serving the old generation until a new one arrives.
+
+The worker applies the forward delta, runs each pinned tree's decision
+round, and returns the existing reverse delta
+(``ArrayMCTS.begin_delta``/``collect_delta``) plus its round's new cache
+entries and counter diffs — so the numeric payload in BOTH directions
+scales with the round, not the tree.  Payload sizes are measured at the
+pickle boundary (``submit_bytes``/``return_bytes``/``snapshot_bytes``,
+surfaced on ``TuneResult``), so the O(round) claim is a number CI can
+gate, not an assertion.
+
+Determinism and fault tolerance: the master keeps the CANONICAL trees —
+every reverse delta is applied to its copy (``apply_delta`` reproduces
+the worker's post-round tree exactly), so when a pinned worker dies the
+master respawns it and reseeds it from a snapshot of those trees plus the
+current merged cache; the replacement re-runs the round from the identical
+pre-round state (same pickled RNG), so results — plans, costs, decision
+sequences — are unchanged by any number of worker deaths.  Merges happen
+in worker/tree-index order regardless of completion order, preserving the
+sequential-bit-identity guarantee of the analytic path.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+import pickle
+import traceback
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.engine.cache import CachedMDP
+
+_PROTO = pickle.HIGHEST_PROTOCOL
+
+
+def pick_mp_context():
+    """forkserver where available (workers start from a clean process —
+    forking a jax-threaded parent can deadlock), fork otherwise; schedule
+    pricing is deliberately jax-free so workers stay cheap to spawn.
+
+    The forkserver preloads the engine module chain (numpy, the MDP and
+    cost-model modules — everything a pickled ``CachedMDP``/``ArrayMCTS``
+    needs, none of it jax): children then FORK with the imports already
+    done, so after the first pool of a process, worker spawn cost drops
+    from an import chain to a fork."""
+    methods = multiprocessing.get_all_start_methods()
+    method = next((m for m in ("forkserver", "fork") if m in methods), None)
+    ctx = multiprocessing.get_context(method)
+    if method == "forkserver":
+        # a no-op once the server is running; effective when called (as
+        # here) before the first worker process ever starts
+        ctx.set_forkserver_preload(["repro.core.ensemble"])
+    return ctx
+
+
+# ---------------------------------------------------------------------------
+# Worker side
+# ---------------------------------------------------------------------------
+def _apply_forward(mdp, trees: Dict[int, object], fwd: dict) -> None:
+    """Apply a round's forward delta: params first (a new fit generation
+    evicts the local copies of predictions the master already evicted),
+    then the sibling cache entries, then the root advance (which prices
+    nothing — ``advance_root`` only steps the MDP structure)."""
+    cached = isinstance(mdp, CachedMDP)
+    params = fwd.get("params")
+    if params is not None and cached and mdp.cost_backend is not None:
+        mdp.cost_backend.apply_params(params)
+    cache = fwd.get("cache")
+    if cache is not None and cached:
+        entries, full = cache
+        mdp.cache.apply_export(entries, full)
+    advance = fwd.get("advance")
+    if advance is not None:
+        for tid in sorted(trees):
+            trees[tid].advance_root(advance)
+
+
+def _run_round(mdp, trees: Dict[int, object], fwd: dict):
+    _apply_forward(mdp, trees, fwd)
+    cached = isinstance(mdp, CachedMDP)
+    backend = mdp.cost_backend if cached else None
+    if cached:
+        cache = mdp.cache
+        h0, m0 = cache.hits, cache.misses
+        wm = cache.watermark()
+    serve0 = backend.counters() if backend is not None else None
+    evals0 = getattr(mdp.cost_model, "n_evals", None)
+    results = {}
+    for tid in sorted(trees):  # deterministic within-worker order
+        tree = trees[tid]
+        tree.begin_delta()
+        res = tree.run_decision()
+        results[tid] = (tree.collect_delta(), res)
+    stats = cache_new = serving = evals = None
+    if cached:
+        stats = (cache.hits - h0, cache.misses - m0)
+        # this round's new entries: everything past the round-start
+        # watermark (the worker never refits/evicts, so its tables are
+        # append-only within a round and the islice export is exact)
+        cache_new, _full = cache.export_since(wm)
+    if serve0 is not None:
+        s1 = backend.counters()
+        serving = tuple(a - b for a, b in zip(s1, serve0))
+    if evals0 is not None:
+        evals = getattr(mdp.cost_model, "n_evals") - evals0
+    return ("round", results, stats, cache_new, evals, serving)
+
+
+def _worker_main(conn) -> None:
+    """Pinned-worker loop: hold the init snapshot's trees + serve-only
+    MDP for the whole run, answer one ``round`` message at a time."""
+    mdp = None
+    trees: Dict[int, object] = {}
+    try:
+        while True:
+            try:
+                msg = pickle.loads(conn.recv_bytes())
+            except EOFError:
+                return
+            kind = msg[0]
+            if kind == "init":
+                # (mdp, trees) unpickle from ONE message, so the trees'
+                # shared mdp reference dedups to a single object
+                mdp, trees = msg[1], msg[2]
+                conn.send_bytes(pickle.dumps(("ok",), _PROTO))
+            elif kind == "round":
+                try:
+                    out = _run_round(mdp, trees, msg[1])
+                except Exception:  # deterministic errors surface master-side
+                    out = ("err", traceback.format_exc())
+                conn.send_bytes(pickle.dumps(out, _PROTO))
+            elif kind == "stop":
+                return
+    except (BrokenPipeError, ConnectionResetError, KeyboardInterrupt, OSError):
+        return
+
+
+# ---------------------------------------------------------------------------
+# Master side
+# ---------------------------------------------------------------------------
+@dataclass
+class _Worker:
+    proc: object
+    conn: object
+    tids: List[int]
+    watermark: Optional[tuple] = None
+    known_version: int = 0
+    just_synced: bool = True  # init snapshot already holds the advance/cache
+    submitted: bool = False   # a round message is in flight
+    # keys this worker itself returned last round (pure-analytic runs
+    # only): its own entries land in the master cache past its submit-time
+    # watermark, so without this they would be echoed straight back next
+    # round — ~1/n_workers of every incremental export, pure waste
+    echo: Optional[tuple] = None
+
+
+class PinnedWorkerPool:
+    """Master-side handle over the pinned workers.
+
+    ``trees`` is the ensemble's canonical (master) tree list — this pool
+    mutates it: reverse deltas are applied to these objects every round,
+    which is both what the winner selection reads and what worker-death
+    resync snapshots.  ``mdp`` is the shared (usually ``CachedMDP``) the
+    trees search over.
+    """
+
+    def __init__(self, trees: List[object], mdp, *,
+                 n_workers: Optional[int] = None, mp_context=None):
+        self.trees = trees
+        self.mdp = mdp
+        self.cached = isinstance(mdp, CachedMDP)
+        self.backend = mdp.cost_backend if self.cached else None
+        ctx = mp_context if mp_context is not None else pick_mp_context()
+        self._ctx = ctx
+        n = max(min(len(trees), n_workers or os.cpu_count() or 2), 1)
+        # payload accounting (pickled bytes crossing the pool boundary)
+        self.submit_bytes = 0
+        self.return_bytes = 0
+        self.snapshot_bytes = 0  # init + death-resync whole-state shipments
+        self.submit_bytes_rounds: List[int] = []
+        self.return_bytes_rounds: List[int] = []
+        self.n_worker_restarts = 0
+        self.extra_evals = 0  # worker-side cost-model evals (per-round diffs)
+        # round-robin pinning: tree i lives on worker i % n for the run.
+        # Spawn + init overlap across workers: all processes launch and
+        # receive their snapshots before the first (blocking) ack read.
+        self._workers = [
+            self._launch([t for t in range(len(trees)) if t % n == w])
+            for w in range(n)
+        ]
+        for w in self._workers:
+            self._await_init(w)
+
+    # -- lifecycle -----------------------------------------------------
+    def _launch(self, tids: List[int]) -> _Worker:
+        """Start a worker process and ship its init snapshot: this
+        worker's canonical trees plus the shared MDP (cache counters and
+        serving counters pickle zeroed; the backend pickles serve-only).
+        Paid once at startup and once per worker death — never per
+        round."""
+        parent, child = self._ctx.Pipe(duplex=True)
+        proc = self._ctx.Process(
+            target=_worker_main, args=(child,), daemon=True)
+        proc.start()
+        child.close()
+        w = _Worker(proc, parent, tids)
+        payload = pickle.dumps(
+            ("init", self.mdp, {tid: self.trees[tid] for tid in w.tids}),
+            _PROTO,
+        )
+        w.conn.send_bytes(payload)
+        self.snapshot_bytes += len(payload)
+        if self.cached:
+            w.watermark = self.mdp.cache.watermark()
+        if self.backend is not None:
+            w.known_version = self.backend.trainer.version
+        return w
+
+    def _await_init(self, w: _Worker) -> None:
+        ack = pickle.loads(w.conn.recv_bytes())
+        if ack != ("ok",):
+            raise RuntimeError(f"pinned worker failed to initialize: {ack!r}")
+
+    def _spawn(self, tids: List[int]) -> _Worker:
+        w = self._launch(tids)
+        self._await_init(w)
+        return w
+
+    def _resync(self, w: _Worker) -> _Worker:
+        """Worker-death recovery: respawn and reseed from the master's
+        canonical trees + merged cache.  The snapshot is exactly the
+        worker's lost pre-round state (same pickled RNG), so re-running
+        the round reproduces the lost results bit-for-bit."""
+        self.n_worker_restarts += 1
+        try:
+            w.conn.close()
+        except OSError:
+            pass
+        if w.proc.is_alive():
+            w.proc.terminate()
+        w.proc.join(timeout=5)
+        fresh = self._spawn(w.tids)
+        self._workers[self._workers.index(w)] = fresh
+        return fresh
+
+    def shutdown(self) -> None:
+        for w in self._workers:
+            try:
+                w.conn.send_bytes(pickle.dumps(("stop",), _PROTO))
+            except (BrokenPipeError, ConnectionResetError, OSError):
+                pass
+        for w in self._workers:
+            w.proc.join(timeout=5)
+            if w.proc.is_alive():
+                w.proc.terminate()
+            try:
+                w.conn.close()
+            except OSError:
+                pass
+
+    # -- the per-round protocol ----------------------------------------
+    def _forward(self, w: _Worker, advance: Optional[int]) -> dict:
+        """Build this worker's forward delta and move its cursors.  A
+        just-(re)synced worker's snapshot already contains the advance,
+        the full cache, and the current model — everything ships empty."""
+        fwd: dict = {"advance": None if w.just_synced else advance}
+        w.just_synced = False
+        if self.cached:
+            if w.watermark != (wm := self.mdp.cache.watermark()):
+                entries, full = self.mdp.cache.export_since(w.watermark)
+                if not full and w.echo is not None:
+                    # drop the worker's own last-round entries: a pure
+                    # memo maps a key to one exact value, so the worker's
+                    # copy is already the merged value (learned runs never
+                    # set ``echo`` — a sibling's exact audit can overwrite
+                    # a prediction, and the worker must see that)
+                    t, p, tv, pv = entries
+                    et, ep = w.echo
+                    entries = (
+                        {k: v for k, v in t.items() if k not in et},
+                        {k: v for k, v in p.items() if k not in ep},
+                        tv, pv,
+                    )
+                fwd["cache"] = (entries, full)
+                w.watermark = wm
+            else:
+                fwd["cache"] = None
+            w.echo = None
+        if self.backend is not None:
+            fwd["params"] = self.backend.params_delta(w.known_version)
+            w.known_version = self.backend.trainer.version
+        return fwd
+
+    def _submit(self, w: _Worker, advance: Optional[int]) -> None:
+        buf = pickle.dumps(("round", self._forward(w, advance)), _PROTO)
+        w.conn.send_bytes(buf)
+        self.submit_bytes += len(buf)
+        self._round_submit += len(buf)
+        w.submitted = True
+
+    def _collect(self, w: _Worker, advance: Optional[int]):
+        """One worker's round result; on a dead pipe, resync and re-run
+        the round once before giving up."""
+        for attempt in (0, 1):
+            try:
+                if not w.submitted:
+                    self._submit(w, advance)
+                buf = w.conn.recv_bytes()
+            except (BrokenPipeError, ConnectionResetError, EOFError, OSError):
+                if attempt:
+                    raise RuntimeError(
+                        f"pinned worker for trees {w.tids} died twice in "
+                        f"one round") from None
+                w = self._resync(w)
+                continue
+            w.submitted = False
+            self.return_bytes += len(buf)
+            self._round_return += len(buf)
+            msg = pickle.loads(buf)
+            if msg[0] == "err":
+                raise RuntimeError(f"pinned worker raised:\n{msg[1]}")
+            return msg[1:]
+        raise AssertionError("unreachable")
+
+    def round(self, advance: Optional[int] = None) -> List[object]:
+        """One decision round across all pinned workers.
+
+        Submits every worker's forward delta, then collects and merges in
+        worker order (each worker's trees in index order) — deterministic
+        regardless of completion order.  Returns the per-tree
+        ``DecisionResult``s in tree-index order."""
+        self._round_submit = 0
+        self._round_return = 0
+        for w in list(self._workers):
+            try:
+                self._submit(w, advance)
+            except (BrokenPipeError, ConnectionResetError, OSError):
+                self._resync(w)  # snapshot embeds the advance; collect submits
+        results: Dict[int, object] = {}
+        for i in range(len(self._workers)):
+            # re-read: _collect may have replaced the worker via resync
+            got = self._collect(self._workers[i], advance)
+            tree_out, stats, cache_new, evals, serving = got
+            for tid in sorted(tree_out):
+                delta, res = tree_out[tid]
+                self.trees[tid].apply_delta(delta)
+                results[tid] = res
+            if self.cached and cache_new is not None:
+                self.mdp.cache.apply_export(cache_new)
+                if stats is not None:
+                    self.mdp.cache.hits += stats[0]
+                    self.mdp.cache.misses += stats[1]
+                if self.backend is None:
+                    # pure-analytic: remember what this worker just sent
+                    # so next round's forward export skips echoing it back
+                    self._workers[i].echo = (
+                        set(cache_new[0]), set(cache_new[1]))
+            if serving is not None and self.backend is not None:
+                self.backend.merge_counters(serving)
+            if evals is not None:
+                self.extra_evals += evals
+        self.submit_bytes_rounds.append(self._round_submit)
+        self.return_bytes_rounds.append(self._round_return)
+        return [results[tid] for tid in range(len(self.trees))]

@@ -19,17 +19,23 @@ simulations queue their pending leaves into one ``terminal_cost_batch``
 call (``repro.core.engine.batch``) — results are identical to the
 per-tree loop, and with the cache on so are the aggregate cache/eval
 counters (uncached, in-batch dedup can only lower ``n_evals``).
-``parallel=True`` runs each tree's decision in a ``ProcessPoolExecutor``
-(the old ThreadPool path was GIL-bound): results are merged in tree-index
-order regardless of completion order.  Array trees return per-round tree
-DELTAS (new/updated node slices + this round's new cache entries) instead
-of whole pickled trees — the return payload that made the pool lose to
-sequential below ~4 cores; reference trees keep the whole-tree round trip.
-Search results — plan, cost, and the decision sequence — are identical to
-the sequential path for a fixed seed; the ``n_evals``/``cache_*`` counters
-can differ slightly when the cache is on, because workers run against
-round-start cache snapshots and may re-evaluate states a sibling priced in
-the same round.
+``parallel=True`` runs each tree's decision round in PERSISTENT PINNED
+workers (``engine/workers.py``): each worker process holds its subset of
+the trees plus one serve-only ``CachedMDP`` for the whole run, and the
+per-round traffic is a delta in BOTH directions — the master submits only
+the root-advance action, the siblings' new cache entries since the
+worker's last submit, and model params when the fit generation changed;
+the worker returns the per-round tree delta (new/updated node slices +
+this round's new cache entries).  Payload bytes at the pickle boundary
+are counted and surfaced on ``TuneResult``
+(``submit_bytes``/``return_bytes``/``snapshot_bytes`` + per-round lists).
+Reference trees keep the stateless whole-tree ``ProcessPoolExecutor``
+round trip.  Search results — plan, cost, and the decision sequence — are
+identical to the sequential path for a fixed seed, and survive worker
+deaths (the master reseeds a replacement from its canonical trees); the
+``n_evals``/``cache_*`` counters can differ slightly when the cache is
+on, because workers run against round-start cache snapshots and may
+re-evaluate states a sibling priced in the same round.
 
 Cost serving layer: ``cost="learned"|"hybrid"`` mounts a
 ``HybridCostBackend`` (``engine/serving.py``) inside the shared
@@ -44,8 +50,6 @@ mounts nothing and stays bit-identical to the certified PR-2 path.
 from __future__ import annotations
 
 import dataclasses
-import itertools
-import multiprocessing
 import os
 import time
 from concurrent.futures import ProcessPoolExecutor
@@ -60,6 +64,7 @@ from repro.core.engine import (
 )
 from repro.core.engine.array_mcts import ArrayMCTS
 from repro.core.engine.batch import run_decision_batch
+from repro.core.engine.workers import PinnedWorkerPool, pick_mp_context
 from repro.core.mcts import MCTSConfig
 from repro.core.mdp import ScheduleMDP, State
 from repro.core.space import SchedulePlan
@@ -85,6 +90,15 @@ class TuneResult:
     model_version: int = 0  # serving model's fit generation at run end
     n_fits: int = 0
     learned_evals: int = 0  # plans priced by the learned model
+    # pinned process-pool payload accounting (parallel array runs; zeros
+    # otherwise): pickled bytes crossing the pool boundary, so the
+    # O(round) transport claim is a measured number (engine/workers.py)
+    submit_bytes: int = 0    # master -> workers, per-round forward deltas
+    return_bytes: int = 0    # workers -> master, per-round reverse deltas
+    snapshot_bytes: int = 0  # init + worker-death resync shipments
+    submit_bytes_rounds: List[int] = field(default_factory=list)
+    return_bytes_rounds: List[int] = field(default_factory=list)
+    n_worker_restarts: int = 0
 
     def to_dict(self):
         d = dataclasses.asdict(self)
@@ -109,45 +123,6 @@ def _tree_decision(tree):
     return tree, res, stats, serving
 
 
-def _tree_decision_delta(tree):
-    """Worker task (array engine): run one tree's per-decision budget and
-    return the round's TREE DELTA — the new/updated node slices — instead
-    of the whole pickled tree (the whole-tree return trip is what made the
-    pool lose to sequential below ~4 cores).  New cache entries ship as
-    plain dict slices: entries are append-only and insertion-ordered, so
-    everything past the round-start lengths is exactly this round's
-    additions.  Model-version tags for learned-priced entries ship the
-    same way (a worker backend serves but never refits, so every tag it
-    writes names the model version the master shipped it — merged caches
-    stay interpretable)."""
-    cached = isinstance(tree.mdp, CachedMDP)
-    if cached:
-        cache = tree.mdp.cache
-        base_t, base_p = len(cache.terminal), len(cache.partial)
-        base_tv = len(cache.terminal_version)
-        base_pv = len(cache.partial_version)
-    tree.begin_delta()
-    res = tree.run_decision()
-    delta = tree.collect_delta()
-    stats = cache_new = serving = None
-    if cached:
-        stats = (cache.hits, cache.misses)
-        cache_new = (
-            dict(itertools.islice(cache.terminal.items(), base_t, None)),
-            dict(itertools.islice(cache.partial.items(), base_p, None)),
-            dict(itertools.islice(
-                cache.terminal_version.items(), base_tv, None)),
-            dict(itertools.islice(
-                cache.partial_version.items(), base_pv, None)),
-        )
-        if tree.mdp.cost_backend is not None:
-            # pricing counters were zeroed at pickle time, so these are
-            # exactly this round's serving activity
-            serving = tree.mdp.cost_backend.counters()
-    n_evals = getattr(tree.mdp.cost_model, "n_evals", None)
-    return delta, res, stats, cache_new, n_evals, serving
-
-
 class ProTuner:
     def __init__(
         self,
@@ -163,9 +138,11 @@ class ProTuner:
         cache: Optional[bool] = None,
         batch: Optional[bool] = None,
         cost: str = "analytic",
+        n_workers: Optional[int] = None,
     ):
         self.measure_fn = measure_fn
         self.parallel = parallel
+        self.n_workers = n_workers
         self.engine = engine
         # learned-cost serving: cost="learned"|"hybrid" (or a ready-made
         # HybridCostBackend) mounts the serving layer inside CachedMDP;
@@ -217,6 +194,8 @@ class ProTuner:
         self._measure_cache: Dict[State, float] = {}
         self.n_measurements = 0
         self._extra_evals = 0  # worker-side evals (parallel mode)
+        self._pool: Optional[PinnedWorkerPool] = None
+        self._pending_advance: Optional[int] = None  # last root-sync action
         # per-tree counter baseline at submission time; -1 = the tree was
         # reattached to the shared mdp, so next round's baseline is the
         # master counter (uncached trees keep private mdp copies whose
@@ -252,55 +231,37 @@ class ProTuner:
             return run_decision_batch(self.trees, self.mdp)
         return [t.run_decision() for t in self.trees]
 
+    def _round_pinned(self):
+        """One decision round through the persistent pinned workers
+        (``engine/workers.py``): forward deltas out (root advance +
+        sibling cache entries + generation-keyed params), reverse deltas
+        back, merged deterministically onto the master's canonical trees
+        and cache.  The master-side refit point stays here: workers never
+        refit (their backends shipped serve-only), so the merged cache is
+        scored after the round and the new generation ships with the next
+        round's forward deltas."""
+        results = self._pool.round(self._pending_advance)
+        self._pending_advance = None
+        self._extra_evals += self._pool.extra_evals
+        self._pool.extra_evals = 0
+        if isinstance(self.mdp, CachedMDP):
+            self.mdp.on_round_end()
+        return results
+
     def _round_parallel(self, executor: ProcessPoolExecutor):
-        """One decision round across workers; deterministic merge: results
-        and tree updates happen in tree-index order regardless of
+        """One decision round across stateless executor workers (the
+        reference engine's whole-tree round trip); deterministic merge:
+        results and tree updates happen in tree-index order regardless of
         completion order, so output is identical to the sequential path.
-        Array trees travel one-way: the worker returns a per-round tree
-        delta applied to the master's kept tree object; reference trees
-        keep the PR-1 whole-tree round trip."""
+        Array trees never take this path — they run in the pinned pool
+        (``_round_pinned``)."""
         base_evals = getattr(self.mdp.cost_model, "n_evals", None)
         if base_evals is not None and self._sent_evals is None:
             self._sent_evals = [base_evals] * len(self.trees)
-        futures = [
-            executor.submit(
-                _tree_decision_delta if isinstance(t, ArrayMCTS)
-                else _tree_decision,
-                t,
-            )
-            for t in self.trees
-        ]
+        futures = [executor.submit(_tree_decision, t) for t in self.trees]
         results = []
         for i, fut in enumerate(futures):
-            got = fut.result()
-            if isinstance(self.trees[i], ArrayMCTS):
-                # delta path: the master's tree object persists
-                delta, res, stats, cache_new, worker_evals, serving = got
-                self.trees[i].apply_delta(delta)
-                if self.cache is not None and cache_new is not None:
-                    # exact-wins merge (TranspositionCache._merge_tbl):
-                    # siblings can race on a state — one model-pricing it,
-                    # one auditing analytically — and exact must survive
-                    self.cache._merge_tbl(
-                        self.cache.terminal, self.cache.terminal_version,
-                        cache_new[0], cache_new[2])
-                    self.cache._merge_tbl(
-                        self.cache.partial, self.cache.partial_version,
-                        cache_new[1], cache_new[3])
-                    if stats is not None:
-                        self.cache.hits += stats[0]
-                        self.cache.misses += stats[1]
-                if serving is not None and self.cost_backend is not None:
-                    self.cost_backend.merge_counters(serving)
-                if base_evals is not None and worker_evals is not None:
-                    sent = self._sent_evals[i]
-                    if sent < 0:  # master counter at submit is the baseline
-                        sent = base_evals
-                    self._extra_evals += max(worker_evals - sent, 0)
-                    self._sent_evals[i] = -1
-                results.append(res)
-                continue
-            tree, res, stats, serving = got
+            tree, res, stats, serving = fut.result()
             if serving is not None and self.cost_backend is not None:
                 self.cost_backend.merge_counters(serving)
             if base_evals is not None:
@@ -335,21 +296,28 @@ class ProTuner:
         executor: Optional[ProcessPoolExecutor] = None
         try:
             if self.parallel:
-                # forkserver: workers start from a clean process (forking a
-                # jax-threaded parent can deadlock) and stay cheap to spawn —
-                # schedule pricing is deliberately jax-free (kernels/geometry)
-                methods = multiprocessing.get_all_start_methods()
-                method = next(
-                    (m for m in ("forkserver", "fork") if m in methods), None
-                )
-                executor = ProcessPoolExecutor(
-                    max_workers=min(len(self.trees), os.cpu_count() or 2),
-                    mp_context=multiprocessing.get_context(method),
-                )
+                if all(isinstance(t, ArrayMCTS) for t in self.trees):
+                    # persistent pinned workers: trees + serve-only mdp
+                    # ship ONCE; every round after that is a delta in
+                    # both directions (engine/workers.py)
+                    self._pool = PinnedWorkerPool(
+                        self.trees, self.mdp, n_workers=self.n_workers,
+                    )
+                else:
+                    # reference engine: stateless whole-tree round trips
+                    executor = ProcessPoolExecutor(
+                        max_workers=min(
+                            len(self.trees),
+                            self.n_workers or os.cpu_count() or 2,
+                        ),
+                        mp_context=pick_mp_context(),
+                    )
             while not self.trees[0].done:
                 if time_budget_s and time.perf_counter() - t0 > time_budget_s:
                     break
-                if executor is not None:
+                if self._pool is not None:
+                    results = self._round_pinned()
+                elif executor is not None:
                     results = self._round_parallel(executor)
                 else:
                     results = self._round_sequential()
@@ -387,7 +355,12 @@ class ProTuner:
                 )
                 for t in self.trees:
                     t.advance_root(win.action)
+                # pinned workers are one advance behind the master's
+                # canonical trees until the next round's forward delta
+                self._pending_advance = win.action
         finally:
+            if self._pool is not None:
+                self._pool.shutdown()
             if executor is not None:
                 # wait=True: with wait=False the queue-feeder thread can
                 # block forever on the large pickled-tree payloads still in
@@ -414,6 +387,7 @@ class ProTuner:
             final_cost = self._exact_cost(final_state)
         n_evals = getattr(self.mdp.cost_model, "n_evals", 0) + self._extra_evals
         serving = self.cost_backend.stats() if self.cost_backend else None
+        pool = self._pool
         return TuneResult(
             plan=self.mdp.plan(final_state),
             cost=final_cost,
@@ -430,6 +404,12 @@ class ProTuner:
             model_version=serving["model_version"] if serving else 0,
             n_fits=serving["n_fits"] if serving else 0,
             learned_evals=serving["learned_plans"] if serving else 0,
+            submit_bytes=pool.submit_bytes if pool else 0,
+            return_bytes=pool.return_bytes if pool else 0,
+            snapshot_bytes=pool.snapshot_bytes if pool else 0,
+            submit_bytes_rounds=list(pool.submit_bytes_rounds) if pool else [],
+            return_bytes_rounds=list(pool.return_bytes_rounds) if pool else [],
+            n_worker_restarts=pool.n_worker_restarts if pool else 0,
         )
 
 
@@ -457,6 +437,7 @@ class MCTSEnsembleBackend:
         cache: Optional[bool] = None,
         batch: Optional[bool] = None,
         cost=None,  # None -> the backend's configured self.cost
+        n_workers: Optional[int] = None,
         **_,
     ) -> TuneResult:
         mc = dataclasses.replace(self.config, seed=seed)
@@ -475,6 +456,7 @@ class MCTSEnsembleBackend:
             cache=cache,
             batch=batch,
             cost=cost if cost is not None else self.cost,
+            n_workers=n_workers,
         )
         res = tuner.run(time_budget_s=time_budget_s)
         res.algo = self.algo

@@ -30,7 +30,12 @@ def main(argv=None) -> int:
                          "(online-trained MLP prices cache misses), hybrid "
                          "(learned only while confident; analytic fallback)")
     ap.add_argument("--parallel", action="store_true",
-                    help="run ensemble trees in a process pool")
+                    help="run ensemble trees on persistent pinned worker "
+                         "processes (per-round deltas both directions; "
+                         "identical results)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="cap the pinned worker pool (default: one per "
+                         "core, up to the tree count)")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
 
@@ -51,6 +56,7 @@ def main(argv=None) -> int:
         engine=args.engine,
         parallel=args.parallel,
         cost=args.cost,
+        n_workers=args.workers,
     )
     mdp = make_mdp(args.arch, args.shape, args.mesh)
     terms = mdp.cost_model.terms(res.plan)
@@ -59,6 +65,12 @@ def main(argv=None) -> int:
         print(f"[autotune] cost serving: {res.cost_mode} "
               f"(model v{res.model_version}, {res.n_fits} fits, "
               f"{res.learned_evals} learned-priced plans)")
+    if res.submit_bytes:
+        print(f"[autotune] pinned pool: {res.submit_bytes:,}B submitted / "
+              f"{res.return_bytes:,}B returned over "
+              f"{len(res.submit_bytes_rounds)} rounds, "
+              f"{res.snapshot_bytes:,}B snapshot, "
+              f"{res.n_worker_restarts} worker restarts")
     print(f"[autotune] best cost {res.cost*1e3:.2f} ms "
           f"(measured: {res.measured and f'{res.measured*1e3:.2f} ms'}) "
           f"evals={res.n_evals} measurements={res.n_measurements} "

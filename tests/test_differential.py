@@ -149,8 +149,49 @@ def test_ensemble_identical_across_engines(cell):
     ref = run(engine="reference", cache=False)
     arr = run(engine="array", batch=False)
     bat = run(engine="array", batch=True)
+    par = run(engine="array", parallel=True)  # pinned process-pool workers
     assert arr == ref
     assert bat == ref
+    assert par == ref
+
+
+# ---------------------------------------------------------------------------
+# Parallel legs over the grid dimensions: the pinned process pool
+# (engine/workers.py) must reproduce the sequential ensemble bit-for-bit
+# for every UCB variant / simulation policy / reward mode.  One
+# representative config per UCB keeps the pool spawns inside the tier-1
+# budget; the full sequential grid above already certifies the engines,
+# and the pool's transport is value-blind (pure-memo cache entries +
+# per-round tree deltas), so any divergence here is a protocol bug.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "ucb,simulation,reward",
+    [
+        ("paper", "random", "cost"),
+        ("cp10", "greedy", "binary"),
+        ("sqrt2", "greedy", "cost"),
+    ],
+)
+def test_parallel_identical_across_grid(ucb, simulation, reward):
+    cfg = MCTSConfig(
+        ucb=ucb, simulation=simulation, reward_mode=reward,
+        iters_per_decision=8,
+    )
+
+    def run(parallel):
+        res = ProTuner(
+            _mdp("moe_train"), n_standard=2, n_greedy=1, mcts_config=cfg,
+            seed=1, parallel=parallel,
+        ).run()
+        return (
+            res.plan,
+            res.cost,
+            [d["action"] for d in res.decisions],
+            [d["best_cost"] for d in res.decisions],
+            [d["winner_tree"] for d in res.decisions],
+        )
+
+    assert run(True) == run(False)
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,9 @@
 """Fault tolerance control-plane tests: heartbeats, rendezvous re-balance,
-straggler eviction, elastic restart plans."""
+straggler eviction, elastic restart plans — plus the search engine's
+pinned-worker death/resync protocol (``repro.core.engine.workers``)."""
 import itertools
+import os
+import signal
 
 from repro.runtime.fault_tolerance import (
     ElasticPlan,
@@ -99,3 +102,49 @@ def test_rebalanced_pipeline_is_exact():
     import numpy as np
 
     np.testing.assert_array_equal(recomputed["inputs"], orig[2]["inputs"])
+
+
+def test_pinned_worker_death_resync_identical_to_sequential(monkeypatch):
+    """Kill a pinned search worker mid-run — twice, in different rounds.
+    The master must respawn it and reseed it from its CANONICAL tree
+    snapshot plus the merged cache (``PinnedWorkerPool._resync``); the
+    replacement re-runs the lost round from the identical pre-round state
+    (same pickled RNG), so the tuning result — plan, cost, decision
+    sequence — is bit-identical to the sequential path regardless of the
+    deaths."""
+    from repro.core.autotuner import make_mdp
+    from repro.core.ensemble import ProTuner
+    from repro.core.mcts import MCTSConfig
+
+    cfg = MCTSConfig(iters_per_decision=10)
+
+    def make(parallel):
+        return ProTuner(
+            make_mdp("granite-moe-1b-a400m", "train_4k"), n_standard=2,
+            n_greedy=1, mcts_config=cfg, seed=11, engine="array",
+            parallel=parallel,
+        )
+
+    seq = make(False).run()
+
+    rounds = {"n": 0}
+    orig = ProTuner._round_pinned
+
+    def killing(self):
+        rounds["n"] += 1
+        if rounds["n"] in (2, 4):  # before the round's submit: the dead
+            w = self._pool._workers[0]  # pipe surfaces on send or collect
+            os.kill(w.proc.pid, signal.SIGKILL)
+            w.proc.join(timeout=10)
+        return orig(self)
+
+    monkeypatch.setattr(ProTuner, "_round_pinned", killing)
+    tuner = make(True)
+    par = tuner.run()
+    assert par.n_worker_restarts == 2
+    # each resync re-shipped a snapshot (beyond the two initial inits)
+    assert par.snapshot_bytes > 0
+    assert par.plan == seq.plan and par.cost == seq.cost
+    assert [d["action"] for d in par.decisions] == [
+        d["action"] for d in seq.decisions
+    ]

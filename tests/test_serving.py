@@ -388,6 +388,54 @@ def test_pickled_backend_is_serve_only():
     assert wbe.trainer.version == v
 
 
+def test_params_ship_only_on_generation_change_and_evict_on_install():
+    """The pinned-worker forward seam: ``params_delta`` is ``None`` while
+    the fit generation is unchanged (nothing re-pickles round after
+    round), ships ``(version, confident, model)`` exactly when a refit
+    minted a new generation, and ``apply_params`` on the worker side
+    mirrors the master's refit eviction before installing — stale
+    predictions tagged by the superseded generation must not keep serving
+    as hits."""
+    mdp = _mdp()
+    # steps=10: the protocol under test is version bookkeeping, not fit
+    # quality — confidence_threshold=-1 serves whatever comes out
+    be = _backend(mdp.space, confidence_threshold=-1.0, steps=10)
+    cmdp = CachedMDP(mdp, cost_backend=be)
+    assert be.params_delta(0) is None  # untrained: generation 0 everywhere
+    _warm(cmdp, n=40)
+    cmdp.on_round_end()  # master refit -> generation 1
+    v = be.trainer.version
+    assert v >= 1
+    delta = be.params_delta(0)
+    assert delta is not None
+    assert delta[0] == v and delta[2] is be.trainer.model
+    assert be.params_delta(v) is None  # same generation: nothing ships
+
+    # worker holds generation v (the init snapshot) and serves with it
+    worker = pickle.loads(pickle.dumps(cmdp))
+    wbe = worker.cost_backend
+    rng = random.Random(23)
+    states = [tuple(mdp.space.random_actions(rng)) for _ in range(12)]
+    worker.terminal_cost_batch(states)
+    tagged = [s for s in states if s in worker.cache.terminal_version]
+    assert tagged and all(
+        worker.cache.terminal_version[s] == v for s in tagged
+    )
+
+    # master refits again -> generation v+1; the worker keeps serving the
+    # old model until the delta arrives, then installs and evicts
+    assert be.trainer.fit(cmdp.cache) is not None
+    delta2 = be.params_delta(v)
+    assert delta2 is not None and delta2[0] == v + 1
+    assert wbe.trainer.version == v  # still the old generation
+    wbe.apply_params(delta2)
+    assert wbe.trainer.version == v + 1
+    assert wbe.model is delta2[2]
+    for s in tagged:  # superseded predictions evicted, repriced on lookup
+        assert s not in worker.cache.terminal
+    assert not worker.cache.terminal_version
+
+
 def test_cache_merge_carries_version_tags():
     a, b = TranspositionCache(), TranspositionCache()
     a.terminal[(1, 2)] = 0.5

@@ -1,0 +1,154 @@
+"""Deterministic CI gate for the measurement fleet (perf-smoke job).
+
+Drives the fig-9 budget sweep spec through the sweep harness with a
+4-worker fleet and the analytic stub target, injecting one worker
+SIGKILL and one watchdog timeout into the first two measurement
+requests, then asserts the ISSUE-6 acceptance criteria:
+
+* zero lost requests — every artifact row has a measured record;
+* every request's retries stay within the configured budget;
+* exactly two worker restarts (the SIGKILL + the watchdog's kill) and
+  exactly one watchdog timeout were observed;
+* per-request retry/timeout/death counters are surfaced on the stored
+  artifact rows;
+* every fleet-written cache file is byte-for-byte identical to the one
+  the serial ``measure_cell`` path writes for the same plan;
+* no poisoned (unparseable or schema-less) cache entries on disk.
+
+Everything runs against tmp dirs with the XLA-free stub, so the gate is
+seconds, not compiles.  Exit 0 = pass, 1 = fail (CI-gateable).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.sweep import load_spec, run_sweep  # noqa: E402
+
+SPEC = os.path.join(os.path.dirname(__file__), "sweeps", "fig9_budget.json")
+N_WORKERS = 4
+MAX_RETRIES = 2
+TIMEOUT_S = 2.0
+GRACE_S = 1.0
+
+
+def main() -> int:
+    from repro.core.measure import measure_cell
+    from repro.core.measure_stub import stub_measure
+    from repro.core.space import SchedulePlan
+
+    tmp = tempfile.mkdtemp(prefix="fleet_gate_")
+    results_dir = os.path.join(tmp, "results")
+    fleet_cache = os.path.join(tmp, "fleet_cache")
+    serial_cache = os.path.join(tmp, "serial_cache")
+    bad = []
+
+    spec = load_spec(SPEC)
+    # the real per-cell budget is 20 s; the gate shrinks it so the whole
+    # 24-row sweep stays CI-sized (the fleet path under test is identical)
+    spec["defaults"]["budget_s"] = 0.2
+
+    def inject(i: int, req: dict) -> None:
+        if i == 0:
+            req["extras"] = {"inject": {
+                "marker": os.path.join(tmp, "kill.marker"), "kind": "kill"}}
+        elif i == 1:
+            req["extras"] = {"inject": {
+                "marker": os.path.join(tmp, "sleep.marker"), "kind": "sleep",
+                "sleep_s": 30}}
+
+    try:
+        rows = run_sweep(
+            spec,
+            results_dir=results_dir,
+            measure="stub",
+            workers=N_WORKERS,
+            fleet_kwargs={
+                "cache_dir": fleet_cache,
+                "target": stub_measure,
+                "timeout": TIMEOUT_S,
+                "grace_s": GRACE_S,
+                "max_retries": MAX_RETRIES,
+                "backoff_s": 0.05,
+            },
+            inject=inject,
+        )
+
+        # zero lost requests; counters surfaced on every stored row
+        for row in rows:
+            prov = row["measure"]
+            if row["measured_step_s"] is None or prov is None or prov["failed"]:
+                bad.append(f"lost request on row {row['key']}: {prov}")
+            elif prov["retries"] > MAX_RETRIES:
+                bad.append(
+                    f"row {row['key']}: {prov['retries']} retries "
+                    f"> budget {MAX_RETRIES}")
+        for field in ("retries", "timeouts", "worker_deaths", "from_cache"):
+            if any(field not in (r["measure"] or {}) for r in rows):
+                bad.append(f"provenance field {field!r} missing from rows")
+
+        # the two injections were exercised, recovered, and counted
+        stats = rows[0]["fleet"]
+        if stats["n_worker_restarts"] != 2:
+            bad.append(f"expected 2 worker restarts (SIGKILL + watchdog "
+                       f"kill), saw {stats['n_worker_restarts']}")
+        if stats["n_timeouts"] != 1:
+            bad.append(f"expected 1 watchdog timeout, saw "
+                       f"{stats['n_timeouts']}")
+        if rows[0]["measure"]["worker_deaths"] != 1:
+            bad.append(f"row 0 (SIGKILL-injected) worker_deaths = "
+                       f"{rows[0]['measure']['worker_deaths']}, expected 1")
+        if rows[1]["measure"]["timeouts"] != 1:
+            bad.append(f"row 1 (sleep-injected) timeouts = "
+                       f"{rows[1]['measure']['timeouts']}, expected 1")
+
+        # byte-identity vs the serial measure_cell path, and no poisoned
+        # entries anywhere in the fleet's cache dir
+        for row in rows:
+            s = row["settings"]
+            measure_cell(
+                s["arch"], s["shape"], s["mesh"],
+                plan=SchedulePlan.from_dict(row["plan"]),
+                cache_dir=serial_cache, target=stub_measure,
+            )
+        fleet_files = sorted(os.listdir(fleet_cache))
+        serial_files = sorted(os.listdir(serial_cache))
+        if fleet_files != serial_files:
+            bad.append(f"cache key sets differ: fleet {len(fleet_files)} "
+                       f"vs serial {len(serial_files)}")
+        for name in fleet_files:
+            with open(os.path.join(fleet_cache, name), "rb") as f:
+                fb = f.read()
+            try:
+                rec = json.loads(fb)
+                if not isinstance(rec, dict) or "step_s" not in rec:
+                    bad.append(f"poisoned cache entry {name}: bad schema")
+            except ValueError:
+                bad.append(f"poisoned cache entry {name}: unparseable")
+                continue
+            serial_path = os.path.join(serial_cache, name)
+            if os.path.exists(serial_path):
+                with open(serial_path, "rb") as f:
+                    if f.read() != fb:
+                        bad.append(f"cache entry {name} differs from the "
+                                   f"serial measure_cell record")
+
+        if bad:
+            print(f"[fleet-gate] FAIL ({len(bad)} problem(s)):")
+            for b in bad:
+                print(f"  - {b}")
+            return 1
+        print(f"[fleet-gate] OK: {len(rows)} rows, {len(fleet_files)} cache "
+              f"records byte-identical to serial, fleet stats {stats}")
+        return 0
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

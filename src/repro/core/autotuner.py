@@ -103,6 +103,7 @@ def autotune(
     n_standard: int = 15,
     n_greedy: int = 1,
     measure_fn: Optional[Callable] = None,
+    measure_backend=None,
     time_budget_s: Optional[float] = None,
     noise_sigma: float = 0.0,
     mdp: Optional[ScheduleMDP] = None,
@@ -135,7 +136,16 @@ def autotune(
     or ``"hybrid"`` (serve it only while its holdout Spearman clears the
     confidence gate; exact-analytic fallback otherwise).  A pre-configured
     ``HybridCostBackend`` is also accepted.  See
-    ``repro.core.engine.serving`` and ``docs/architecture.md``."""
+    ``repro.core.engine.serving`` and ``docs/architecture.md``.
+
+    ``measure_backend`` threads a fleet-bound measurement adapter
+    (``MeasurementFleet.bind(...)``, see ``repro.core.measure_fleet``)
+    through to the ensemble: ``mcts_cost+real_*`` runs then batch each
+    root synchronization's candidate measurements through the fleet's
+    workers instead of blocking the search loop on serial subprocess
+    compiles, and a failed measurement degrades that candidate to its
+    exact analytic cost (counted on ``TuneResult.n_measure_failures``)
+    instead of aborting the run."""
     assert engine in ENGINES, engine
     mdp = mdp or make_mdp(arch, shape_name, mesh, noise_sigma, seed)
     backend: SearchBackend = resolve_backend(algo, engine=engine)
@@ -144,6 +154,7 @@ def autotune(
         seed=seed,
         time_budget_s=time_budget_s,
         measure_fn=measure_fn,
+        measure_backend=measure_backend,
         n_standard=n_standard,
         n_greedy=n_greedy,
         parallel=parallel,

@@ -50,6 +50,7 @@ mounts nothing and stays bit-identical to the certified PR-2 path.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import os
 import time
 from concurrent.futures import ProcessPoolExecutor
@@ -70,6 +71,8 @@ from repro.core.mdp import ScheduleMDP, State
 from repro.core.space import SchedulePlan
 
 INF = float("inf")
+
+logger = logging.getLogger(__name__)
 
 
 @dataclass
@@ -99,6 +102,9 @@ class TuneResult:
     submit_bytes_rounds: List[int] = field(default_factory=list)
     return_bytes_rounds: List[int] = field(default_factory=list)
     n_worker_restarts: int = 0
+    # candidates whose real measurement failed and were re-ranked by their
+    # exact analytic cost instead (mcts_cost+real_* graceful degradation)
+    n_measure_failures: int = 0
 
     def to_dict(self):
         d = dataclasses.asdict(self)
@@ -132,6 +138,7 @@ class ProTuner:
         n_greedy: int = 1,
         mcts_config: MCTSConfig = MCTSConfig(),
         measure_fn: Optional[Callable[[SchedulePlan], float]] = None,
+        measure_backend=None,
         parallel: bool = False,
         seed: int = 0,
         engine: str = "array",
@@ -140,6 +147,15 @@ class ProTuner:
         cost: str = "analytic",
         n_workers: Optional[int] = None,
     ):
+        # measure_backend: a fleet-bound FleetMeasure (core/measure_fleet).
+        # It is callable with the same plan -> seconds contract, so it can
+        # stand in for measure_fn wholesale; when present, candidate
+        # batches additionally prefetch through its measure_plans fan-out
+        # so the re-rank blocks on ONE round trip instead of N serial
+        # compiles.
+        self.measure_backend = measure_backend
+        if measure_fn is None and measure_backend is not None:
+            measure_fn = measure_backend
         self.measure_fn = measure_fn
         self.parallel = parallel
         self.n_workers = n_workers
@@ -192,7 +208,9 @@ class ProTuner:
             self.trees.append(make_tree(mdp, cfg, engine))
             self.greedy_flags.append(True)
         self._measure_cache: Dict[State, float] = {}
+        self._measure_failed: set = set()  # states re-ranked by analytic cost
         self.n_measurements = 0
+        self.n_measure_failures = 0
         self._extra_evals = 0  # worker-side evals (parallel mode)
         self._pool: Optional[PinnedWorkerPool] = None
         self._pending_advance: Optional[int] = None  # last root-sync action
@@ -214,13 +232,49 @@ class ProTuner:
         return self.mdp.terminal_cost(state)
 
     # ------------------------------------------------------------------
+    def _degrade(self, state: State, why: str) -> float:
+        """A failed measurement must not kill the run: re-rank this
+        candidate by its EXACT analytic cost, count it, and keep going."""
+        self.n_measure_failures += 1
+        t = self._exact_cost(state)
+        self._measure_cache[state] = t
+        self._measure_failed.add(state)
+        logger.warning(
+            "measurement failed (candidate degraded to analytic cost "
+            "%.6gs): %s", t, why,
+        )
+        return t
+
     def _measure_state(self, state: State) -> float:
         if state in self._measure_cache:
             return self._measure_cache[state]
-        t = self.measure_fn(self.mdp.plan(state))
+        try:
+            t = self.measure_fn(self.mdp.plan(state))
+        except Exception as e:  # noqa: BLE001 - degrade, never abort the run
+            return self._degrade(state, repr(e))
         self._measure_cache[state] = t
         self.n_measurements += 1
         return t
+
+    def _prefetch_measurements(self, states: List[State]) -> None:
+        """Batch the round's candidate measurements through the fleet
+        (one ``measure_many`` fan-out over the workers) so the
+        re-ranking ``min()`` below only ever hits the local cache."""
+        todo = [s for s in states if s not in self._measure_cache]
+        if not todo or self.measure_backend is None:
+            return
+        plans = [self.mdp.plan(s) for s in todo]
+        try:
+            times = self.measure_backend.measure_plans(plans)
+        except Exception as e:  # noqa: BLE001 - fall back to per-state path
+            logger.warning("fleet prefetch failed (%r); measuring serially", e)
+            return
+        for st, t in zip(todo, times):
+            if t is None:
+                self._degrade(st, "fleet measurement failed")
+            else:
+                self._measure_cache[st] = t
+                self.n_measurements += 1
 
     # ------------------------------------------------------------------
     def _round_sequential(self):
@@ -334,6 +388,7 @@ class ProTuner:
                         st = results[i].best_state
                         if st is not None and st not in seen:
                             seen[st] = i
+                    self._prefetch_measurements(list(seen))
                     best_i = min(
                         seen.values(),
                         key=lambda i: self._measure_state(results[i].best_state),
@@ -383,7 +438,10 @@ class ProTuner:
             cands = dict(self._measure_cache)
             cands[final_state] = self._measure_state(final_state)
             final_state = min(cands, key=cands.get)
-            measured = cands[final_state]
+            # a degraded candidate's entry is its analytic cost, not a
+            # real measurement — never report it as one
+            if final_state not in self._measure_failed:
+                measured = cands[final_state]
             final_cost = self._exact_cost(final_state)
         n_evals = getattr(self.mdp.cost_model, "n_evals", 0) + self._extra_evals
         serving = self.cost_backend.stats() if self.cost_backend else None
@@ -410,6 +468,7 @@ class ProTuner:
             submit_bytes_rounds=list(pool.submit_bytes_rounds) if pool else [],
             return_bytes_rounds=list(pool.return_bytes_rounds) if pool else [],
             n_worker_restarts=pool.n_worker_restarts if pool else 0,
+            n_measure_failures=self.n_measure_failures,
         )
 
 
@@ -431,6 +490,7 @@ class MCTSEnsembleBackend:
         seed: int = 0,
         time_budget_s: Optional[float] = None,
         measure_fn: Optional[Callable] = None,
+        measure_backend=None,
         n_standard: int = 15,
         n_greedy: int = 1,
         parallel: bool = False,
@@ -444,12 +504,14 @@ class MCTSEnsembleBackend:
         # paper protocol: only the cost+real_* variants re-rank by real
         # measurement at root synchronization
         use_measure = measure_fn if "real" in self.algo else None
+        use_backend = measure_backend if "real" in self.algo else None
         tuner = ProTuner(
             mdp,
             n_standard=n_standard,
             n_greedy=n_greedy,
             mcts_config=mc,
             measure_fn=use_measure,
+            measure_backend=use_backend,
             parallel=parallel,
             seed=seed,
             engine=self.engine,

@@ -23,14 +23,27 @@ import os
 import re
 import subprocess
 import sys
+import tempfile
+import uuid
 from typing import Dict, Optional
 
 from repro.core.cost_model import HW, HardwareSpec
 from repro.core.space import SchedulePlan
 
-CACHE_DIR = os.environ.get(
-    "REPRO_MEASURE_CACHE", os.path.join(os.getcwd(), "experiments", "measure_cache")
+# v2: the cache key now includes ``devices`` (a pre-fix key collapsed all
+# device counts of a cell onto one record) — the versioned subdirectory
+# namespaces the corrected entries so a stale pre-fix cache is never served.
+CACHE_DIR = os.path.join(
+    os.environ.get(
+        "REPRO_MEASURE_CACHE",
+        os.path.join(os.getcwd(), "experiments", "measure_cache"),
+    ),
+    "v2",
 )
+
+# the subprocess module a measurement spawns; tests point this at
+# ``repro.launch.dryrun_stub`` (same CLI, analytic record, no XLA compile)
+DRYRUN_MODULE = "repro.launch.dryrun"
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -141,9 +154,147 @@ def combine_terms(
 # ---------------------------------------------------------------------------
 # Subprocess measurement client (with on-disk cache)
 # ---------------------------------------------------------------------------
-def _cache_key(arch: str, shape: str, mesh: str, plan: Optional[dict]) -> str:
-    blob = json.dumps([arch, shape, mesh, plan], sort_keys=True)
+# Cache-key contract (docs/architecture.md §8): the key is a content hash
+# of EVERY input that can change the record — key version, arch, shape,
+# mesh, DEVICE COUNT, and the full plan dict.  ``devices`` was missing
+# before v2: measuring the same (arch, shape, mesh) at a different forced
+# device count silently returned the first count's record.
+KEY_VERSION = 2
+
+
+def _cache_key(
+    arch: str, shape: str, mesh: str, plan: Optional[dict],
+    devices: Optional[int] = None,
+) -> str:
+    blob = json.dumps(
+        [KEY_VERSION, arch, shape, mesh, devices, plan], sort_keys=True
+    )
     return hashlib.sha1(blob.encode()).hexdigest()[:20]
+
+
+def make_request(
+    arch: str,
+    shape: str,
+    mesh: str = "single",
+    plan=None,
+    devices: Optional[int] = None,
+    timeout: float = 1800.0,
+    module: Optional[str] = None,
+    extras: Optional[dict] = None,
+) -> dict:
+    """Normalize one measurement request to the plain-dict form every
+    measurement path (serial ``measure_cell``, the fleet, the sweep
+    harness) shares.  ``extras`` is transport-only — it never enters the
+    cache key (fault-injection hooks for tests live there)."""
+    if plan is not None and not isinstance(plan, dict):
+        plan = plan.to_dict()
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "plan": plan,
+        "devices": devices, "timeout": timeout,
+        "module": module or DRYRUN_MODULE, "extras": extras,
+    }
+
+
+def request_key(req: dict) -> str:
+    return _cache_key(
+        req["arch"], req["shape"], req["mesh"], req["plan"],
+        req.get("devices"),
+    )
+
+
+def load_record(path: str) -> Optional[dict]:
+    """Validated cache read.  A corrupt or truncated entry (a crashed
+    writer, a pre-atomic-rename cache) is QUARANTINED — deleted so the
+    next call re-measures — instead of being served as a hit or raising
+    on every lookup forever."""
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except FileNotFoundError:
+        return None
+    except (OSError, ValueError):
+        rec = None
+    if isinstance(rec, dict) and "step_s" in rec:
+        return rec
+    try:
+        os.remove(path)
+    except OSError:
+        pass
+    return None
+
+
+def write_record(path: str, record: dict) -> None:
+    """Atomic publish: write to a sibling tmp file, ``os.replace`` into
+    place.  Readers can never observe a partial record."""
+    tmp = f"{path}.tmp.{os.getpid()}.{uuid.uuid4().hex[:8]}"
+    try:
+        with open(tmp, "w") as f:
+            json.dump(record, f, indent=1)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def _tail(text, n: int = 2000) -> str:
+    return (text or "")[-n:]
+
+
+def measure_request(req: dict) -> dict:
+    """Pure measurement of one request: spawn the dryrun subprocess, point
+    its ``--json-out`` at a PRIVATE tmp file, and return the parsed
+    record.  No cache interaction and no on-disk residue on any failure
+    path — a killed or timed-out compile can never poison a cache entry,
+    because the final cache path is only ever written by the caller's
+    atomic ``write_record``."""
+    arch, shape, mesh = req["arch"], req["shape"], req["mesh"]
+    timeout = req.get("timeout") or 1800.0
+    tmp = os.path.join(
+        tempfile.gettempdir(), f"repro-measure-{os.getpid()}-{uuid.uuid4().hex}.json"
+    )
+    cmd = [
+        sys.executable,
+        "-m",
+        req.get("module") or DRYRUN_MODULE,
+        "--arch", arch,
+        "--shape", shape,
+        "--mesh", mesh,
+        "--json-out", tmp,
+    ]
+    if req.get("plan") is not None:
+        cmd += ["--plan-json", json.dumps(req["plan"])]
+    if req.get("devices") is not None:
+        cmd += ["--devices", str(req["devices"])]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in [env.get("PYTHONPATH"), _src_path()] if p]
+    )
+    try:
+        try:
+            proc = subprocess.run(
+                cmd, capture_output=True, text=True, timeout=timeout, env=env
+            )
+        except subprocess.TimeoutExpired as e:
+            # surface the same RuntimeError path as a failed compile, with
+            # whatever partial output the subprocess produced
+            out = e.stdout.decode() if isinstance(e.stdout, bytes) else e.stdout
+            err = e.stderr.decode() if isinstance(e.stderr, bytes) else e.stderr
+            raise RuntimeError(
+                f"measurement timed out after {timeout:.0f}s for "
+                f"{arch}×{shape}×{mesh}:\n"
+                f"stdout: {_tail(out)}\nstderr: {_tail(err)}"
+            ) from None
+        rec = load_record(tmp) if proc.returncode == 0 else None
+        if rec is None:
+            raise RuntimeError(
+                f"measurement failed for {arch}×{shape}×{mesh} "
+                f"(exit {proc.returncode}):\n"
+                f"stdout: {_tail(proc.stdout)}\nstderr: {_tail(proc.stderr)}"
+            )
+        return rec
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
 
 
 def measure_cell(
@@ -154,45 +305,28 @@ def measure_cell(
     cache_dir: str = CACHE_DIR,
     timeout: float = 1800.0,
     devices: Optional[int] = None,
+    target=None,
 ) -> dict:
     """Compile (arch, shape, plan) on the target mesh in a subprocess and
     return the measured roofline record.  Results are cached on disk —
     re-measuring a schedule is free, exactly like the paper's compiled-
-    binary cache."""
-    plan_dict = plan.to_dict() if plan is not None else None
-    key = _cache_key(arch, shape, mesh, plan_dict)
+    binary cache.  Corrupt cache entries are quarantined and re-measured;
+    the cache file itself is only ever written atomically.  ``target``
+    overrides the measurement function (default: the real subprocess
+    ``measure_request``; tests pass an XLA-free stub)."""
+    req = make_request(arch, shape, mesh, plan, devices, timeout)
+    key = request_key(req)
     os.makedirs(cache_dir, exist_ok=True)
     path = os.path.join(cache_dir, key + ".json")
-    if os.path.exists(path):
-        with open(path) as f:
-            return json.load(f)
-    cmd = [
-        sys.executable,
-        "-m",
-        "repro.launch.dryrun",
-        "--arch", arch,
-        "--shape", shape,
-        "--mesh", mesh,
-        "--json-out", path,
-    ]
-    if plan_dict is not None:
-        cmd += ["--plan-json", json.dumps(plan_dict)]
-    if devices is not None:
-        cmd += ["--devices", str(devices)]
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.pathsep.join(
-        [p for p in [env.get("PYTHONPATH"), _src_path()] if p]
-    )
-    proc = subprocess.run(
-        cmd, capture_output=True, text=True, timeout=timeout, env=env
-    )
-    if proc.returncode != 0 or not os.path.exists(path):
-        raise RuntimeError(
-            f"measurement failed for {arch}×{shape}×{mesh}:\n"
-            f"stdout: {proc.stdout[-2000:]}\nstderr: {proc.stderr[-2000:]}"
-        )
-    with open(path) as f:
-        return json.load(f)
+    rec = load_record(path)
+    if rec is not None:
+        return rec
+    rec = (target or measure_request)(req)
+    write_record(path, rec)
+    # return the JSON round-trip of what was stored, so a fresh
+    # measurement and a later cache hit are structurally identical
+    # (e.g. tuples in the plan normalize to lists)
+    return load_record(path)
 
 
 def measured_step_time(

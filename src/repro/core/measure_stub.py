@@ -1,0 +1,79 @@
+"""XLA-free measurement target for tests, the fleet gate, and sweep smokes.
+
+``stub_measure`` has the exact signature the fleet dispatches to
+(``request dict -> record dict``) but prices the plan with the analytic
+roofline model instead of a subprocess XLA compile — deterministic,
+jax-free, and microseconds instead of seconds.  The record carries NO
+wall-clock fields, so a fleet run and a serial ``measure_cell`` run of
+the same request produce byte-identical cache files (the perf-smoke
+fleet gate's acceptance check).
+
+Fault injection rides in ``req["extras"]["inject"]`` (transport-only —
+never part of the cache key)::
+
+    {"marker": "/tmp/x.marker", "kind": "kill"}            # SIGKILL self
+    {"marker": "/tmp/y.marker", "kind": "sleep", "sleep_s": 5}
+
+The injection fires exactly once: the first attempt creates the marker
+file and then dies (or stalls past the watchdog deadline); the retry
+sees the marker and measures normally.  That makes worker-death and
+timeout recovery deterministic enough for CI.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import time
+
+from repro.configs import get_config, get_shape
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.space import MULTI_POD, SINGLE_POD, SchedulePlan
+
+
+def _fire_injection(extras) -> None:
+    inject = (extras or {}).get("inject")
+    if not inject:
+        return
+    marker = inject["marker"]
+    if os.path.exists(marker):
+        return  # already fired — this is the retry; measure normally
+    with open(marker, "w") as f:
+        f.write(inject["kind"])
+    if inject["kind"] == "kill":
+        os.kill(os.getpid(), signal.SIGKILL)
+    elif inject["kind"] == "sleep":
+        time.sleep(float(inject.get("sleep_s", 60.0)))
+
+
+def failing_measure(req: dict) -> dict:
+    """Target that always fails — exercises the retry-exhaustion path."""
+    raise RuntimeError("deliberate failure")
+
+
+def stub_measure(req: dict) -> dict:
+    """Deterministic analytic 'measurement' of one request dict."""
+    _fire_injection(req.get("extras"))
+    cfg = get_config(req["arch"])
+    shape = get_shape(req["shape"])
+    mspec = MULTI_POD if req["mesh"] == "multi" else SINGLE_POD
+    plan = (
+        SchedulePlan.from_dict(req["plan"])
+        if req.get("plan") is not None
+        else SchedulePlan()
+    )
+    t = AnalyticCostModel(cfg, shape, mspec).terms(plan)
+    return {
+        "arch": req["arch"],
+        "shape": req["shape"],
+        "mesh": req["mesh"],
+        "devices": req.get("devices"),
+        "plan": plan.to_dict(),
+        "compute_s": t.compute_s,
+        "memory_s": t.memory_s,
+        "collective_s": t.collective_s,
+        "step_s": t.step_s,
+        "dominant": t.dominant,
+        "mfu": t.mfu,
+        "feasible": t.feasible,
+        "source": "stub",
+    }

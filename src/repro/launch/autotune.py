@@ -19,6 +19,10 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--measure", action="store_true",
                     help="real measurement (XLA compile) at root syncs")
+    ap.add_argument("--measure-workers", type=int, default=None,
+                    help="with --measure: fan measurements out to N "
+                         "persistent fleet workers (core/measure_fleet) "
+                         "instead of serial in-loop compiles")
     ap.add_argument("--budget-s", type=float, default=None)
     ap.add_argument("--engine", default="array",
                     choices=["reference", "array"],
@@ -42,22 +46,32 @@ def main(argv=None) -> int:
     from repro.core.autotuner import autotune, make_mdp
     from repro.core.measure import make_measure_fn
 
-    measure_fn = (
-        make_measure_fn(args.arch, args.shape, args.mesh) if args.measure else None
-    )
-    res = autotune(
-        args.arch,
-        args.shape,
-        algo=args.algo,
-        mesh=args.mesh,
-        seed=args.seed,
-        measure_fn=measure_fn,
-        time_budget_s=args.budget_s,
-        engine=args.engine,
-        parallel=args.parallel,
-        cost=args.cost,
-        n_workers=args.workers,
-    )
+    measure_fn = measure_backend = fleet = None
+    if args.measure and args.measure_workers:
+        from repro.core.measure_fleet import MeasurementFleet
+
+        fleet = MeasurementFleet(n_workers=args.measure_workers)
+        measure_backend = fleet.bind(args.arch, args.shape, args.mesh)
+    elif args.measure:
+        measure_fn = make_measure_fn(args.arch, args.shape, args.mesh)
+    try:
+        res = autotune(
+            args.arch,
+            args.shape,
+            algo=args.algo,
+            mesh=args.mesh,
+            seed=args.seed,
+            measure_fn=measure_fn,
+            measure_backend=measure_backend,
+            time_budget_s=args.budget_s,
+            engine=args.engine,
+            parallel=args.parallel,
+            cost=args.cost,
+            n_workers=args.workers,
+        )
+    finally:
+        if fleet is not None:
+            fleet.shutdown()
     mdp = make_mdp(args.arch, args.shape, args.mesh)
     terms = mdp.cost_model.terms(res.plan)
     print(f"[autotune] {args.arch}×{args.shape} algo={res.algo}")
@@ -71,6 +85,11 @@ def main(argv=None) -> int:
               f"{len(res.submit_bytes_rounds)} rounds, "
               f"{res.snapshot_bytes:,}B snapshot, "
               f"{res.n_worker_restarts} worker restarts")
+    if fleet is not None:
+        print(f"[autotune] measurement fleet: {fleet.stats()}")
+    if res.n_measure_failures:
+        print(f"[autotune] WARNING: {res.n_measure_failures} candidate(s) "
+              f"degraded to analytic cost after measurement failure")
     print(f"[autotune] best cost {res.cost*1e3:.2f} ms "
           f"(measured: {res.measured and f'{res.measured*1e3:.2f} ms'}) "
           f"evals={res.n_evals} measurements={res.n_measurements} "

@@ -1,0 +1,54 @@
+"""Drop-in CLI replacement for ``repro.launch.dryrun`` that never touches
+XLA: same flags, same ``--json-out`` contract, but the record comes from
+the analytic stub (``repro.core.measure_stub``).  Tests monkeypatch
+``repro.core.measure.DRYRUN_MODULE`` to this module to exercise the real
+subprocess path — tmp-file handling, timeout, exit codes — without a
+compile.
+
+``REPRO_STUB_SLEEP_S`` (env) sleeps before writing the record, so a test
+can force ``subprocess.TimeoutExpired`` deterministically.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--plan-json", default=None)
+    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--devices", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    sleep_s = float(os.environ.get("REPRO_STUB_SLEEP_S", "0"))
+    if sleep_s:
+        time.sleep(sleep_s)
+
+    from repro.core.measure_stub import stub_measure
+
+    rec = stub_measure(
+        {
+            "arch": args.arch,
+            "shape": args.shape,
+            "mesh": args.mesh,
+            "plan": json.loads(args.plan_json) if args.plan_json else None,
+            "devices": args.devices,
+        }
+    )
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rec, f, indent=1)
+    else:
+        json.dump(rec, sys.stdout, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

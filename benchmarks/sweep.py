@@ -94,14 +94,23 @@ def row_key(settings: dict) -> str:
 
 
 def stored_keys(path: str) -> set:
+    """Keys of rows that are DONE — a stored row whose measurement failed
+    (``measured_step_s: null`` with a failed outcome) does not count, so a
+    transient fleet failure is retried on the next resume instead of being
+    pinned forever."""
     keys = set()
     if os.path.exists(path):
         with open(path) as f:
             for line in f:
                 try:
-                    keys.add(json.loads(line)["key"])
+                    row = json.loads(line)
+                    key = row["key"]
                 except (ValueError, KeyError):
                     continue  # a torn row never blocks a sweep
+                measure = row.get("measure")
+                if isinstance(measure, dict) and measure.get("failed"):
+                    continue
+                keys.add(key)
     return keys
 
 

@@ -1,0 +1,210 @@
+"""Tuner-as-a-service serving benchmark + deterministic CI serve gate.
+
+Headline metrics for the daemon (ISSUE-7 acceptance):
+
+* store hit rate over a repeat-heavy request stream;
+* p50/p99 time-to-plan, split by cold (search) vs warm (store) requests;
+* zero re-searches on warm cells — every repeat request is answered from
+  the persistent store with no new search evals;
+* cold-path bit-identity — the daemon's cold plan/cost/decisions equal
+  one-shot ``autotune()`` on the same cell/seed.
+
+Two front ends over one scenario:
+
+    PYTHONPATH=src python -m benchmarks.tuner_service            # artifact
+    PYTHONPATH=src python -m benchmarks.tuner_service --check    # CI gate
+
+``--check`` additionally restarts the service on the SAME store (fresh
+process state, persistent disk state) and asserts every request is a
+store hit with zero searches, then round-trips one request through the
+actual socket daemon (subprocess) — exit 0 = pass, 1 = fail.  Everything
+is analytic/XLA-free, so the gate is seconds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import time
+import uuid
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import ENGINE_STAMP, emit  # noqa: E402
+
+# a repeat-heavy stream over 3 cells: 6 unique requests, 18 total
+CELLS = [
+    ("granite-3-2b", "train_4k"),
+    ("granite-moe-1b-a400m", "train_4k"),
+    ("granite-3-2b", "decode_32k"),
+]
+SEEDS = (0, 1)
+REPEATS = 3
+ALGO = "mcts_1s"
+N_STANDARD, N_GREEDY = 2, 1
+
+
+def _requests():
+    reqs = []
+    for _ in range(REPEATS):
+        for arch, shape in CELLS:
+            for seed in SEEDS:
+                reqs.append(dict(arch=arch, shape=shape, algo=ALGO,
+                                 seed=seed, n_standard=N_STANDARD,
+                                 n_greedy=N_GREEDY))
+    return reqs
+
+
+def _pctile(xs, q):
+    if not xs:
+        return None
+    xs = sorted(xs)
+    i = min(len(xs) - 1, int(round(q * (len(xs) - 1))))
+    return xs[i]
+
+
+def drive(service, requests):
+    """Run a request stream; returns (rows, summary)."""
+    rows = []
+    for req in requests:
+        out = service.handle(dict(req))
+        rows.append({
+            "request": out["request"],
+            "served": out["served"],
+            "time_to_plan_s": out["time_to_plan_s"],
+            "cost": out["result"]["cost"],
+            "plan": out["result"]["plan"],
+            "decisions": len(out["result"]["decisions"]),
+        })
+    cold = [r["time_to_plan_s"] for r in rows if r["served"] == "search"]
+    warm = [r["time_to_plan_s"] for r in rows if r["served"] == "store"]
+    summary = {
+        "n_requests": len(rows),
+        "n_cold": len(cold),
+        "n_warm": len(warm),
+        "store": service.store.stats(),
+        "time_to_plan_s": {
+            "cold_p50": _pctile(cold, 0.50), "cold_p99": _pctile(cold, 0.99),
+            "warm_p50": _pctile(warm, 0.50), "warm_p99": _pctile(warm, 0.99),
+        },
+    }
+    return rows, summary
+
+
+def check_socket_roundtrip(store_dir: str) -> dict:
+    """Round-trip one request through the real subprocess daemon."""
+    from repro.launch.tune_serve import TuneClient
+
+    sock = os.path.join(tempfile.gettempdir(),
+                        f"tuner-{uuid.uuid4().hex[:8]}.sock")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.tune_serve", "serve",
+         "--store", store_dir, "--socket", sock, "--max-requests", "1"],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+    )
+    try:
+        deadline = time.time() + 60
+        while not os.path.exists(sock):
+            assert proc.poll() is None, proc.stdout.read()
+            assert time.time() < deadline, "daemon never bound its socket"
+            time.sleep(0.05)
+        client = TuneClient(sock)
+        assert client.ping()["ok"]
+        arch, shape = CELLS[0]
+        out = client.tune(arch, shape, algo=ALGO, seed=SEEDS[0],
+                          n_standard=N_STANDARD, n_greedy=N_GREEDY)
+        proc.wait(timeout=60)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    assert out["ok"] and out["served"] == "store", out.get("served")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="assert the serve-gate criteria (CI)")
+    ap.add_argument("--store", default=None,
+                    help="persistent store dir (default: tmp, wiped)")
+    ap.add_argument("--outdir", default="experiments/bench")
+    args = ap.parse_args(argv)
+
+    from repro.core.autotuner import autotune
+    from repro.service.daemon import TunerService
+
+    store_dir = args.store or tempfile.mkdtemp(prefix="tuner-store-")
+    owned_tmp = args.store is None
+
+    try:
+        svc = TunerService(store_dir, log=lambda *a: None)
+        rows, summary = drive(svc, _requests())
+        svc.shutdown()
+
+        # cold-path bit-identity vs one-shot autotune on the first cell
+        arch, shape = CELLS[0]
+        ref = autotune(arch, shape, algo=ALGO, seed=SEEDS[0],
+                       n_standard=N_STANDARD, n_greedy=N_GREEDY)
+        first = next(r for r in rows
+                     if r["request"]["arch"] == arch
+                     and r["request"]["shape"] == shape
+                     and r["request"]["seed"] == SEEDS[0])
+        identical = (first["plan"] == ref.plan.to_dict()
+                     and first["cost"] == ref.cost
+                     and first["decisions"] == len(ref.decisions))
+        summary["cold_bit_identical"] = identical
+
+        # restart on the same store: EVERY request must be a store hit
+        svc2 = TunerService(store_dir, log=lambda *a: None)
+        rows2, summary2 = drive(svc2, _requests())
+        svc2.shutdown()
+        summary["after_restart"] = {
+            "n_warm": summary2["n_warm"],
+            "n_searches": svc2.n_searches,
+            "hit_rate": summary2["store"]["hit_rate"],
+        }
+
+        print(f"[tuner_service] {summary['n_requests']} requests: "
+              f"{summary['n_cold']} cold / {summary['n_warm']} warm, "
+              f"hit rate {summary['store']['hit_rate']:.2f}")
+        t = summary["time_to_plan_s"]
+        print(f"[tuner_service] time-to-plan p50/p99: "
+              f"cold {t['cold_p50']:.3f}/{t['cold_p99']:.3f}s, "
+              f"warm {t['warm_p50']*1e3:.1f}/{t['warm_p99']*1e3:.1f}ms")
+        print(f"[tuner_service] cold-path bit-identical: {identical}; "
+              f"restart: {summary['after_restart']}")
+
+        emit([{"engine": ENGINE_STAMP, "summary": summary, "rows": rows}],
+             "tuner_service", outdir=args.outdir)
+
+        if args.check:
+            n_unique = len(CELLS) * len(SEEDS)
+            assert summary["n_cold"] == n_unique, summary
+            assert summary["n_warm"] == len(rows) - n_unique, summary
+            assert identical, "cold daemon result != one-shot autotune"
+            # warm restart: zero searches, all store hits
+            assert svc2.n_searches == 0, svc2.n_searches
+            assert summary2["n_warm"] == len(rows2), summary2
+            # repeat answers are the stored answers, bit-for-bit
+            by_key = {json.dumps(r["request"], sort_keys=True): r
+                      for r in rows}
+            for r in rows2:
+                ref_row = by_key[json.dumps(r["request"], sort_keys=True)]
+                assert r["plan"] == ref_row["plan"], r["request"]
+                assert r["cost"] == ref_row["cost"], r["request"]
+            check_socket_roundtrip(store_dir)
+            print("[tuner_service] serve gate OK")
+    finally:
+        if owned_tmp:
+            shutil.rmtree(store_dir, ignore_errors=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

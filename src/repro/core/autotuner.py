@@ -41,17 +41,16 @@ class NoisyCostModel:
     def _noise(self, plan) -> float:
         if not self.sigma:
             return 1.0
+        # Box-Muller from two INDEPENDENT uniforms: disjoint halves of a
+        # 16-byte digest (a single 8-byte digest reused for both radius and
+        # angle correlates them and skews the distribution off log-normal)
         h = hashlib.blake2b(
-            (str(self.seed) + repr(plan)).encode(), digest_size=8
+            (str(self.seed) + repr(plan)).encode(), digest_size=16
         ).digest()
-        u = int.from_bytes(h, "big") / 2**64
-        # Box-Muller-ish deterministic gaussian
-        import math as m
-
-        z = m.sqrt(-2.0 * m.log(max(u, 1e-12))) * m.cos(
-            2 * m.pi * ((int.from_bytes(h[:4], "big") / 2**32) or 0.5)
-        )
-        return m.exp(self.sigma * z)
+        u1 = int.from_bytes(h[:8], "big") / 2**64
+        u2 = int.from_bytes(h[8:16], "big") / 2**64
+        z = math.sqrt(-2.0 * math.log(max(u1, 1e-12))) * math.cos(2 * math.pi * u2)
+        return math.exp(self.sigma * z)
 
     def cost(self, plan) -> float:
         return self.inner.cost(plan) * self._noise(plan)
@@ -113,6 +112,8 @@ def autotune(
     batch: Optional[bool] = None,
     cost: str = "analytic",
     n_workers: Optional[int] = None,
+    worker_pool=None,
+    plan_store=None,
 ) -> TuneResult:
     """Tune one (arch × shape × mesh) cell.
 
@@ -147,6 +148,24 @@ def autotune(
     exact analytic cost (counted on ``TuneResult.n_measure_failures``)
     instead of aborting the run."""
     assert engine in ENGINES, engine
+    store_req = None
+    if plan_store is not None:
+        # persistent PlanStore (repro.service.store): answer a repeat
+        # request from disk (from_store=True, zero evals), record a cold
+        # result after the run.  The store key covers the value-affecting
+        # settings of THIS signature — a caller passing a custom ``mdp``
+        # must guarantee it matches them (the daemon does; see
+        # service/daemon.py for cell-cache warm start on top of this).
+        from repro.service.store import canonical_request
+
+        store_req = canonical_request(
+            arch, shape_name, mesh=mesh, algo=algo, seed=seed,
+            time_budget_s=time_budget_s, n_standard=n_standard,
+            n_greedy=n_greedy, noise_sigma=noise_sigma, cost=cost,
+        )
+        hit = plan_store.lookup(store_req)
+        if hit is not None:
+            return hit
     mdp = mdp or make_mdp(arch, shape_name, mesh, noise_sigma, seed)
     backend: SearchBackend = resolve_backend(algo, engine=engine)
     res = backend.run(
@@ -162,5 +181,8 @@ def autotune(
         batch=batch,
         cost=cost,
         n_workers=n_workers,
+        worker_pool=worker_pool,
     )
+    if plan_store is not None:
+        plan_store.record(store_req, res)
     return res

@@ -198,7 +198,10 @@ class PinnedWorkerPool:
         self.backend = mdp.cost_backend if self.cached else None
         ctx = mp_context if mp_context is not None else pick_mp_context()
         self._ctx = ctx
-        n = max(min(len(trees), n_workers or os.cpu_count() or 2), 1)
+        n = n_workers or os.cpu_count() or 2
+        if trees:  # never more workers than trees — but an EMPTY pool
+            n = min(n, len(trees))  # (service pre-spawn before any run)
+        n = max(n, 1)  # keeps the requested width for a later rebind()
         # payload accounting (pickled bytes crossing the pool boundary)
         self.submit_bytes = 0
         self.return_bytes = 0
@@ -268,6 +271,46 @@ class PinnedWorkerPool:
         fresh = self._spawn(w.tids)
         self._workers[self._workers.index(w)] = fresh
         return fresh
+
+    def rebind(self, trees: List[object], mdp) -> None:
+        """Re-point the LIVE worker processes at a new run's canonical
+        trees + MDP (the daemon reuses one pool across tuning runs, so
+        worker spawn cost is paid once per process, not once per request).
+
+        Ships a fresh ``init`` snapshot to every worker — the worker loop
+        already accepts repeated inits — and resets all per-worker cursors
+        (cache watermark, model generation, echo set) to the new run's
+        state.  A worker that died between runs is respawned here."""
+        self.trees = trees
+        self.mdp = mdp
+        self.cached = isinstance(mdp, CachedMDP)
+        self.backend = mdp.cost_backend if self.cached else None
+        n = len(self._workers)
+        pending = []
+        for wi, w in enumerate(list(self._workers)):
+            w.tids = [t for t in range(len(trees)) if t % n == wi]
+            payload = pickle.dumps(
+                ("init", mdp, {tid: trees[tid] for tid in w.tids}), _PROTO)
+            try:
+                w.conn.send_bytes(payload)
+            except (BrokenPipeError, ConnectionResetError, OSError):
+                self._resync(w)  # respawn ships the same snapshot
+                continue
+            self.snapshot_bytes += len(payload)
+            if self.cached:
+                w.watermark = mdp.cache.watermark()
+            if self.backend is not None:
+                w.known_version = self.backend.trainer.version
+            w.just_synced = True
+            w.submitted = False
+            w.echo = None
+            pending.append(wi)
+        for wi in pending:
+            w = self._workers[wi]
+            try:
+                self._await_init(w)
+            except (EOFError, ConnectionResetError, OSError):
+                self._resync(w)
 
     def shutdown(self) -> None:
         for w in self._workers:

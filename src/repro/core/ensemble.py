@@ -105,6 +105,9 @@ class TuneResult:
     # candidates whose real measurement failed and were re-ranked by their
     # exact analytic cost instead (mcts_cost+real_* graceful degradation)
     n_measure_failures: int = 0
+    # served from the persistent PlanStore (repro.service) without a
+    # search — n_evals is 0 and decisions are the stored run's
+    from_store: bool = False
 
     def to_dict(self):
         d = dataclasses.asdict(self)
@@ -146,6 +149,7 @@ class ProTuner:
         batch: Optional[bool] = None,
         cost: str = "analytic",
         n_workers: Optional[int] = None,
+        worker_pool: Optional[PinnedWorkerPool] = None,
     ):
         # measure_backend: a fleet-bound FleetMeasure (core/measure_fleet).
         # It is callable with the same plan -> seconds contract, so it can
@@ -157,8 +161,12 @@ class ProTuner:
         if measure_fn is None and measure_backend is not None:
             measure_fn = measure_backend
         self.measure_fn = measure_fn
-        self.parallel = parallel
+        self.parallel = parallel or worker_pool is not None
         self.n_workers = n_workers
+        # an externally owned PinnedWorkerPool (the tuner daemon shares one
+        # pool across runs): rebind it to this run's trees instead of
+        # spawning, and never shut it down
+        self._ext_pool = worker_pool
         self.engine = engine
         # learned-cost serving: cost="learned"|"hybrid" (or a ready-made
         # HybridCostBackend) mounts the serving layer inside CachedMDP;
@@ -350,7 +358,12 @@ class ProTuner:
         executor: Optional[ProcessPoolExecutor] = None
         try:
             if self.parallel:
-                if all(isinstance(t, ArrayMCTS) for t in self.trees):
+                if self._ext_pool is not None:
+                    assert all(isinstance(t, ArrayMCTS) for t in self.trees), \
+                        "a shared worker pool requires the array engine"
+                    self._ext_pool.rebind(self.trees, self.mdp)
+                    self._pool = self._ext_pool
+                elif all(isinstance(t, ArrayMCTS) for t in self.trees):
                     # persistent pinned workers: trees + serve-only mdp
                     # ship ONCE; every round after that is a delta in
                     # both directions (engine/workers.py)
@@ -414,7 +427,7 @@ class ProTuner:
                 # canonical trees until the next round's forward delta
                 self._pending_advance = win.action
         finally:
-            if self._pool is not None:
+            if self._pool is not None and self._pool is not self._ext_pool:
                 self._pool.shutdown()
             if executor is not None:
                 # wait=True: with wait=False the queue-feeder thread can
@@ -498,6 +511,7 @@ class MCTSEnsembleBackend:
         batch: Optional[bool] = None,
         cost=None,  # None -> the backend's configured self.cost
         n_workers: Optional[int] = None,
+        worker_pool=None,
         **_,
     ) -> TuneResult:
         mc = dataclasses.replace(self.config, seed=seed)
@@ -519,6 +533,7 @@ class MCTSEnsembleBackend:
             batch=batch,
             cost=cost if cost is not None else self.cost,
             n_workers=n_workers,
+            worker_pool=worker_pool,
         )
         res = tuner.run(time_budget_s=time_budget_s)
         res.algo = self.algo

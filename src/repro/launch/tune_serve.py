@@ -1,0 +1,126 @@
+"""Tuner-as-a-service CLI: daemon and client ends of one socket.
+
+Serve (long-lived; one worker pool + one fleet + one plan store for every
+request it ever answers):
+
+    python -m repro.launch.tune_serve serve --store /var/tune-store \
+        --socket /tmp/tuner.sock --parallel
+
+Client (per request; returns the tuned plan as JSON on stdout):
+
+    python -m repro.launch.tune_serve tune --socket /tmp/tuner.sock \
+        --arch granite-3-2b --shape train_4k --algo mcts_1s
+    python -m repro.launch.tune_serve stats --socket /tmp/tuner.sock
+    python -m repro.launch.tune_serve shutdown --socket /tmp/tuner.sock
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import socket
+
+
+class TuneClient:
+    """One JSON-lines request/response per call over the daemon socket."""
+
+    def __init__(self, socket_path: str, timeout: float = 600.0):
+        self.socket_path = socket_path
+        self.timeout = timeout
+
+    def call(self, msg: dict) -> dict:
+        with socket.socket(socket.AF_UNIX, socket.SOCK_STREAM) as s:
+            s.settimeout(self.timeout)
+            s.connect(self.socket_path)
+            with s.makefile("rwb") as f:
+                f.write((json.dumps(msg) + "\n").encode())
+                f.flush()
+                line = f.readline()
+        if not line:
+            raise ConnectionError("daemon closed the connection")
+        return json.loads(line)
+
+    def tune(self, arch: str, shape: str, **settings) -> dict:
+        return self.call({"op": "tune", "arch": arch, "shape": shape,
+                          **settings})
+
+    def stats(self) -> dict:
+        return self.call({"op": "stats"})
+
+    def ping(self) -> dict:
+        return self.call({"op": "ping"})
+
+    def shutdown(self) -> dict:
+        return self.call({"op": "shutdown"})
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sv = sub.add_parser("serve", help="run the daemon")
+    sv.add_argument("--store", required=True, help="plan-store root dir")
+    sv.add_argument("--socket", required=True, help="unix socket path")
+    sv.add_argument("--parallel", action="store_true",
+                    help="share one pinned worker pool across runs")
+    sv.add_argument("--workers", type=int, default=None)
+    sv.add_argument("--measure", default="none",
+                    choices=["none", "stub", "real"],
+                    help="shared measurement fleet for *real* algos "
+                         "(stub = deterministic XLA-free target)")
+    sv.add_argument("--max-requests", type=int, default=None,
+                    help="exit after N tune requests (tests/CI smoke)")
+
+    def add_request_args(p):
+        p.add_argument("--socket", required=True)
+        p.add_argument("--arch", required=True)
+        p.add_argument("--shape", required=True)
+        p.add_argument("--algo", default="mcts_30s")
+        p.add_argument("--mesh", default="single", choices=["single", "multi"])
+        p.add_argument("--seed", type=int, default=0)
+        p.add_argument("--budget-s", type=float, default=None)
+        p.add_argument("--n-standard", type=int, default=15)
+        p.add_argument("--n-greedy", type=int, default=1)
+        p.add_argument("--noise-sigma", type=float, default=0.0)
+        p.add_argument("--cost", default="analytic",
+                       choices=["analytic", "learned", "hybrid"])
+
+    tn = sub.add_parser("tune", help="submit one tuning request")
+    add_request_args(tn)
+
+    st = sub.add_parser("stats", help="daemon counters")
+    st.add_argument("--socket", required=True)
+    sd = sub.add_parser("shutdown", help="stop the daemon")
+    sd.add_argument("--socket", required=True)
+
+    args = ap.parse_args(argv)
+
+    if args.cmd == "serve":
+        from repro.service.daemon import TunerService, serve_forever
+
+        service = TunerService(
+            args.store, parallel=args.parallel, n_workers=args.workers,
+            measure=args.measure,
+        )
+        served = serve_forever(service, args.socket,
+                               max_requests=args.max_requests)
+        print(f"[tune_serve] served {served} request(s)")
+        return 0
+
+    client = TuneClient(args.socket)
+    if args.cmd == "stats":
+        out = client.stats()
+    elif args.cmd == "shutdown":
+        out = client.shutdown()
+    else:
+        out = client.tune(
+            args.arch, args.shape, algo=args.algo, mesh=args.mesh,
+            seed=args.seed, time_budget_s=args.budget_s,
+            n_standard=args.n_standard, n_greedy=args.n_greedy,
+            noise_sigma=args.noise_sigma, cost=args.cost,
+        )
+    print(json.dumps(out, indent=1, default=str))
+    return 0 if out.get("ok") else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

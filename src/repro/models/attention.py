@@ -87,14 +87,26 @@ def decode_step(
     cfg: ModelConfig,
     cache: dict,
     x: jax.Array,  # (B, 1, d)
-    cur: jax.Array,  # scalar int32 — current length (position of new token)
+    cur: jax.Array,  # int32 position of the new token: scalar, or (B,) per-row
     *,
     shard: Callable[[jax.Array, str], jax.Array],
 ) -> Tuple[jax.Array, dict]:
     B = x.shape[0]
     hd = cfg.resolved_head_dim
+    cur = jnp.asarray(cur, jnp.int32)
+    per_row = cur.ndim == 1  # continuous batching: each row at its own length
+
+    def _write_at_cur(c, new):
+        # KV write at the token position — per-row positions need a
+        # per-row dynamic_update_slice (vmapped over the batch axis)
+        if per_row:
+            return jax.vmap(
+                lambda cb, nb, pb: jax.lax.dynamic_update_slice(cb, nb, (0, pb, 0))
+            )(c, new, cur)
+        return jax.lax.dynamic_update_slice(c, new, (0, 0, cur, 0))
+
     q, k_new, v_new = _project(p, x, cfg)  # (B,H,1,hd), (B,Hkv,1,hd)
-    pos = jnp.full((B, 1), cur, jnp.int32)
+    pos = cur[:, None] if per_row else jnp.full((B, 1), cur, jnp.int32)
     if cfg.pos_kind == "mrope":
         pos = jnp.broadcast_to(pos[:, None, :], (B, 3, 1))
     q, k_new = layers.apply_positions(q, k_new, cfg, pos)
@@ -103,10 +115,10 @@ def decode_step(
     if int8_kv:
         kq, ks = _quant_kv(k_new)
         vq, vs = _quant_kv(v_new)
-        kc = jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, cur, 0))
-        vc = jax.lax.dynamic_update_slice(cache["v"], vq, (0, 0, cur, 0))
-        kss = jax.lax.dynamic_update_slice(cache["k_s"], ks, (0, 0, cur, 0))
-        vss = jax.lax.dynamic_update_slice(cache["v_s"], vs, (0, 0, cur, 0))
+        kc = _write_at_cur(cache["k"], kq)
+        vc = _write_at_cur(cache["v"], vq)
+        kss = _write_at_cur(cache["k_s"], ks)
+        vss = _write_at_cur(cache["v_s"], vs)
         kc = shard(kc, "kv_cache")
         vc = shard(vc, "kv_cache")
         new_cache = {"k": kc, "v": vc, "k_s": kss, "v_s": vss}
@@ -116,8 +128,8 @@ def decode_step(
         k_scale = kss[..., 0]  # (B, Hkv, S)
         v_scale = vss[..., 0]
     else:
-        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, 0, cur, 0))
-        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, 0, cur, 0))
+        k = _write_at_cur(cache["k"], k_new.astype(cache["k"].dtype))
+        v = _write_at_cur(cache["v"], v_new.astype(cache["v"].dtype))
         k = shard(k, "kv_cache")
         v = shard(v, "kv_cache")
         new_cache = {"k": k, "v": v}
@@ -136,7 +148,8 @@ def decode_step(
     if k_scale is not None:
         logits = logits * k_scale[:, :, None, None, :]
     t = jnp.arange(k.shape[2])
-    mask = t[None, None, None, None, :] <= cur
+    lim = cur[:, None, None, None, None] if per_row else cur
+    mask = t[None, None, None, None, :] <= lim
     logits = jnp.where(mask, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     if v_scale is not None:

@@ -221,7 +221,7 @@ def decode_step(
     cfg: ModelConfig,
     cache: dict,
     inputs: jax.Array,  # (B,1) token or (B,1,d) embedding
-    cur: jax.Array,  # scalar int32 position of the new token
+    cur: jax.Array,  # int32 position of the new token: scalar, or (B,) per-row
     *,
     tiles: KernelTiles = DEFAULT_TILES,
     shard: ShardFn = _identity_shard,
@@ -229,7 +229,11 @@ def decode_step(
     moe_dist=None,
 ) -> Tuple[jax.Array, dict]:
     plan = cfg.layer_plan()
-    pos = jnp.broadcast_to(cur, (inputs.shape[0], 1)).astype(jnp.int32)
+    cur = jnp.asarray(cur, jnp.int32)
+    pos = (
+        cur[:, None] if cur.ndim == 1
+        else jnp.broadcast_to(cur, (inputs.shape[0], 1)).astype(jnp.int32)
+    )
     h = shard(_embed(params, cfg, inputs, pos), "act_btd")
 
     def period_body(h, xs):

@@ -1,0 +1,247 @@
+"""Tuner-as-a-service: the long-lived daemon loop.
+
+``TunerService`` is the in-process core (directly usable from tests and
+benchmarks, no socket): requests arrive as plain dicts, the plan store
+answers repeats instantly, and cold requests run the normal search — but
+against *persistent* shared machinery instead of one-shot copies:
+
+* one ``PinnedWorkerPool`` across ALL runs — worker processes spawn once
+  per daemon, each run rebinds them to its trees
+  (``PinnedWorkerPool.rebind``) and ships per-round deltas as usual;
+* one ``MeasurementFleet`` across all measuring runs;
+* one in-memory ``TranspositionCache`` per cell, warm-started from the
+  store's cell tier and synced back after every run (exact-wins both
+  ways, see ``service/store.py``).
+
+Cold-path results are bit-identical to one-shot ``autotune()`` — the
+warm cache is a pure memo of exact values, so plan/cost/decisions match
+and only eval counts drop (certified by ``tests/test_differential.py``).
+
+``serve_forever`` wraps the service in a Unix-domain-socket JSON-lines
+protocol (one request object per line, one response object per line):
+
+    {"op": "tune", "arch": ..., "shape": ..., "algo": ..., ...}
+    {"op": "stats"} | {"op": "ping"} | {"op": "shutdown"}
+
+``repro.launch.tune_serve`` is the CLI for both ends.
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import time
+from typing import Dict, Optional
+
+from repro.core.autotuner import autotune, make_mdp
+from repro.core.engine.cache import CachedMDP, TranspositionCache
+from repro.core.engine.workers import PinnedWorkerPool
+from repro.service.store import PlanStore, canonical_request, cell_key
+
+_EXEC_KEYS = ("engine", "parallel", "n_workers")
+
+
+class _CellState:
+    """Daemon-lifetime state for one cell: the shared in-memory cache and
+    the store-sync cursor (``None`` until the first sync → full export)."""
+
+    __slots__ = ("cache", "store_wm")
+
+    def __init__(self):
+        self.cache = TranspositionCache()
+        self.store_wm = None
+
+
+class TunerService:
+    def __init__(
+        self,
+        store_dir: str,
+        *,
+        parallel: bool = False,
+        n_workers: Optional[int] = None,
+        measure: str = "none",
+        fleet_kwargs: Optional[dict] = None,
+        log=print,
+    ):
+        assert measure in ("none", "stub", "real"), measure
+        self.store = PlanStore(store_dir)
+        self.parallel = parallel
+        self.n_workers = n_workers
+        self.measure = measure
+        self.fleet_kwargs = dict(fleet_kwargs or {})
+        self.log = log
+        self.cells: Dict[str, _CellState] = {}
+        self.pool: Optional[PinnedWorkerPool] = None
+        self.fleet = None
+        self.n_requests = 0
+        self.n_searches = 0
+        self.time_to_plan: list = []  # seconds per request, store hits incl.
+
+    # -- shared machinery (lazy, daemon-lifetime) ----------------------
+    def _shared_pool(self, mdp) -> Optional[PinnedWorkerPool]:
+        if not self.parallel:
+            return None
+        if self.pool is None:
+            # pre-spawn at the requested width with no trees; every run
+            # rebinds (workers.py keeps the width for empty trees)
+            self.pool = PinnedWorkerPool([], mdp, n_workers=self.n_workers)
+        return self.pool
+
+    def _shared_fleet(self):
+        if self.measure == "none":
+            return None
+        if self.fleet is None:
+            from repro.core.measure_fleet import MeasurementFleet
+
+            fkw = dict(self.fleet_kwargs)
+            if self.measure == "stub":
+                from repro.core.measure_stub import stub_measure
+
+                fkw.setdefault("target", stub_measure)
+            fkw.setdefault(
+                "cache_dir", os.path.join(self.store.root, "measure_cache"))
+            self.fleet = MeasurementFleet(**fkw)
+        return self.fleet
+
+    # -- request handling ----------------------------------------------
+    def handle(self, request: dict) -> dict:
+        """One tuning request → one response dict.  ``request`` carries
+        the ``canonical_request`` settings plus optional execution knobs
+        (engine/parallel/n_workers), which never enter the store key."""
+        t0 = time.perf_counter()
+        exec_knobs = {k: request[k] for k in _EXEC_KEYS if k in request}
+        req = canonical_request(**{
+            k: v for k, v in request.items() if k not in _EXEC_KEYS})
+        self.n_requests += 1
+
+        res = self.store.lookup(req)
+        served = "store"
+        if res is None:
+            res = self._tune(req, exec_knobs)
+            served = "search"
+        dt = time.perf_counter() - t0
+        self.time_to_plan.append(dt)
+        return {
+            "ok": True,
+            "served": served,
+            "request": req,
+            "time_to_plan_s": dt,
+            "result": res.to_dict(),
+        }
+
+    def _tune(self, req: dict, exec_knobs: dict):
+        ckey = cell_key(req)
+        cell = self.cells.setdefault(ckey, _CellState())
+        if not cell.cache.n_entries:
+            n = self.store.warm_cell(
+                ckey, cell.cache, include_learned=req["cost"] != "analytic")
+            if n:
+                self.log(f"[tuner-service] cell {ckey[:8]}: warmed "
+                         f"{n} entries from store")
+        mdp = CachedMDP(make_mdp(
+            req["arch"], req["shape"], req["mesh"],
+            req["noise_sigma"], req["noise_seed"],
+        ), cache=cell.cache)
+        fleet = self._shared_fleet()
+        measure_backend = (
+            fleet.bind(req["arch"], req["shape"], req["mesh"])
+            if fleet is not None and "real" in req["algo"] else None
+        )
+        parallel = exec_knobs.get("parallel", self.parallel)
+        self.n_searches += 1
+        res = autotune(
+            req["arch"], req["shape"],
+            algo=req["algo"], mesh=req["mesh"], seed=req["seed"],
+            n_standard=req["n_standard"], n_greedy=req["n_greedy"],
+            time_budget_s=req["time_budget_s"],
+            noise_sigma=req["noise_sigma"], cost=req["cost"],
+            mdp=mdp,
+            engine=exec_knobs.get("engine", "array"),
+            parallel=parallel,
+            n_workers=exec_knobs.get("n_workers", self.n_workers),
+            worker_pool=self._shared_pool(mdp) if parallel else None,
+            measure_backend=measure_backend,
+        )
+        self.store.record(req, res)
+        cell.store_wm = self.store.sync_cell(ckey, cell.cache, cell.store_wm)
+        return res
+
+    def stats(self) -> dict:
+        out = {
+            "n_requests": self.n_requests,
+            "n_searches": self.n_searches,
+            "store": self.store.stats(),
+            "cells": {k: v.cache.stats() for k, v in self.cells.items()},
+        }
+        if self.fleet is not None:
+            out["fleet"] = self.fleet.stats()
+        if self.pool is not None:
+            out["pool"] = {
+                "submit_bytes": self.pool.submit_bytes,
+                "return_bytes": self.pool.return_bytes,
+                "snapshot_bytes": self.pool.snapshot_bytes,
+                "n_worker_restarts": self.pool.n_worker_restarts,
+            }
+        return out
+
+    def shutdown(self) -> None:
+        if self.pool is not None:
+            self.pool.shutdown()
+            self.pool = None
+        if self.fleet is not None:
+            self.fleet.shutdown()
+            self.fleet = None
+
+
+# ---------------------------------------------------------------------------
+# Socket front end (JSON lines over a Unix domain socket)
+# ---------------------------------------------------------------------------
+def serve_forever(service: TunerService, socket_path: str,
+                  *, max_requests: Optional[int] = None) -> int:
+    """Accept loop: one JSON object per line in, one per line out.
+    ``max_requests`` bounds the loop for tests/CI smoke.  Returns the
+    number of requests served."""
+    if os.path.exists(socket_path):
+        os.remove(socket_path)
+    served = 0
+    srv = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    try:
+        srv.bind(socket_path)
+        srv.listen(8)
+        service.log(f"[tuner-service] listening on {socket_path}")
+        stop = False
+        while not stop and (max_requests is None or served < max_requests):
+            conn, _ = srv.accept()
+            with conn, conn.makefile("rwb") as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        msg = json.loads(line)
+                        op = msg.pop("op", "tune")
+                        if op == "ping":
+                            out = {"ok": True, "pong": True}
+                        elif op == "stats":
+                            out = {"ok": True, "stats": service.stats()}
+                        elif op == "shutdown":
+                            out = {"ok": True, "stopping": True}
+                            stop = True
+                        elif op == "tune":
+                            out = service.handle(msg)
+                            served += 1
+                        else:
+                            out = {"ok": False, "error": f"unknown op {op!r}"}
+                    except Exception as e:  # a bad request never kills the daemon
+                        out = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+                    f.write((json.dumps(out) + "\n").encode())
+                    f.flush()
+                    if stop or (max_requests is not None
+                                and served >= max_requests):
+                        break
+    finally:
+        srv.close()
+        if os.path.exists(socket_path):
+            os.remove(socket_path)
+        service.shutdown()
+    return served

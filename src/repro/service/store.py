@@ -1,0 +1,281 @@
+"""Persistent content-addressed plan store: the tuner's on-disk tier.
+
+Two tiers, both under one root directory, both JSON, both published with
+the measurement-cache discipline (``core/measure.py``): tmp-sibling +
+``os.replace`` atomic writes, validate-and-quarantine on read.
+
+``plans/<request-key>.json`` — complete tuned results.  The key hashes
+every *value-affecting* request setting (arch, shape, mesh, algo, seed,
+budget, ensemble size, noise, cost mode) and deliberately EXCLUDES
+execution knobs (``engine``, ``parallel``, ``n_workers``) — the engines
+are certified bit-identical (``tests/test_differential.py``), so a plan
+tuned by any of them answers the same request.  A hit reproduces the full
+``TuneResult`` (plan, exact cost, decision trace) with ``from_store=True``
+and zero search evals.
+
+``cells/<cell-key>.json`` — per-cell ``TranspositionCache`` snapshots.
+The cell key hashes only what cache *values* depend on (arch, shape,
+mesh, noise), so every algo/seed/budget tuning the same cell shares one
+warm-start file.  Sync reuses the pinned-worker delta protocol
+(``TranspositionCache.watermark``/``export_since``/``apply_export``):
+each sync exports the in-memory cache's new entries since the last sync,
+merges them into the on-disk state under the exact-wins rule, and
+publishes atomically.  Writers are lock-free — concurrent daemons race on
+the ``os.replace`` and the loser's delta simply lands on its next sync
+(its in-memory cache still holds everything); exact-wins makes the merge
+order-independent for exact entries, so the store converges.
+
+Warm starts load only EXACT (untagged) entries by default: a memo of
+exact analytic costs changes hit counts but never values, so a warmed
+search's plan/cost/decisions stay bit-identical to a cold one.  Learned-
+tagged entries (model predictions) are persisted — exact-wins applies
+across restarts too — but are only loaded into runs that themselves serve
+a learned model (``include_learned=True``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import uuid
+from typing import Optional, Tuple
+
+from repro.core.engine.cache import TranspositionCache, Watermark
+from repro.core.ensemble import TuneResult
+from repro.core.space import SchedulePlan
+
+STORE_VERSION = 1
+
+# the TuneResult fields a stored plan must round-trip (everything else
+# defaults on decode)
+_REQUIRED_RESULT = ("plan", "cost", "decisions")
+
+
+def canonical_request(
+    arch: str,
+    shape: str,
+    *,
+    mesh: str = "single",
+    algo: str = "mcts_30s",
+    seed: int = 0,
+    time_budget_s: Optional[float] = None,
+    n_standard: int = 15,
+    n_greedy: int = 1,
+    noise_sigma: float = 0.0,
+    noise_seed: Optional[int] = None,
+    cost: str = "analytic",
+    **_ignored,
+) -> dict:
+    """Normalize a tuning request to the value-affecting settings only.
+    ``noise_seed`` defaults to ``seed`` — exactly ``autotune()``'s own
+    ``make_mdp(..., noise_sigma, seed)`` default — and normalizes to 0
+    when ``noise_sigma`` is 0 (no noise → the seed is value-inert, and
+    every noise-free run of a cell should share one cell file).
+    Execution knobs (engine/parallel/n_workers) are accepted and
+    dropped."""
+    return {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh,
+        "algo": algo,
+        "seed": seed,
+        "time_budget_s": time_budget_s,
+        "n_standard": n_standard,
+        "n_greedy": n_greedy,
+        "noise_sigma": noise_sigma,
+        "noise_seed": (
+            (seed if noise_seed is None else noise_seed) if noise_sigma else 0
+        ),
+        "cost": cost,
+    }
+
+
+def request_key(req: dict) -> str:
+    blob = json.dumps([STORE_VERSION, req], sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest()[:20]
+
+
+def cell_key(req: dict) -> str:
+    """Cache-value identity: every request whose cache entries are
+    interchangeable (same cost function) maps to one cell file."""
+    blob = json.dumps(
+        [STORE_VERSION, req["arch"], req["shape"], req["mesh"],
+         req["noise_sigma"], req["noise_seed"]],
+        sort_keys=True,
+    )
+    return hashlib.sha1(blob.encode()).hexdigest()[:20]
+
+
+# ---------------------------------------------------------------------------
+# Atomic file discipline (the measurement-cache pattern)
+# ---------------------------------------------------------------------------
+def _write_json(path: str, obj: dict) -> None:
+    tmp = f"{path}.tmp.{os.getpid()}.{uuid.uuid4().hex[:8]}"
+    try:
+        with open(tmp, "w") as f:
+            json.dump(obj, f)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def _load_json(path: str, validate) -> Optional[dict]:
+    """Validated read: a corrupt, truncated, or schema-violating file is
+    QUARANTINED (deleted) so the next request re-tunes, instead of being
+    served forever or crashing every lookup."""
+    try:
+        with open(path) as f:
+            obj = json.load(f)
+    except FileNotFoundError:
+        return None
+    except (OSError, ValueError):
+        obj = None
+    if isinstance(obj, dict) and obj.get("version") == STORE_VERSION:
+        try:
+            if validate(obj):
+                return obj
+        except (KeyError, TypeError, ValueError):
+            pass
+    try:
+        os.remove(path)
+    except OSError:
+        pass
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Cache table codec (state tuples <-> JSON lists)
+# ---------------------------------------------------------------------------
+def _encode_tbl(tbl: dict) -> list:
+    return [[list(k), v] for k, v in tbl.items()]
+
+
+def _decode_tbl(rows: list) -> dict:
+    out = {}
+    for k, v in rows:
+        out[tuple(int(a) for a in k)] = v
+    return out
+
+
+def _result_to_dict(res: TuneResult) -> dict:
+    return res.to_dict()
+
+
+def _result_from_dict(d: dict) -> TuneResult:
+    d = dict(d)
+    d["plan"] = SchedulePlan.from_dict(d["plan"])
+    known = {f.name for f in dataclasses.fields(TuneResult)}
+    res = TuneResult(**{k: v for k, v in d.items() if k in known})
+    res.from_store = True
+    return res
+
+
+class PlanStore:
+    """On-disk tier shared by every daemon (and any one-shot ``autotune``
+    pointed at the same root)."""
+
+    def __init__(self, root: str):
+        self.root = root
+        self.plans_dir = os.path.join(root, "plans")
+        self.cells_dir = os.path.join(root, "cells")
+        os.makedirs(self.plans_dir, exist_ok=True)
+        os.makedirs(self.cells_dir, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    # -- plan tier -----------------------------------------------------
+    def _plan_path(self, req: dict) -> str:
+        return os.path.join(self.plans_dir, request_key(req) + ".json")
+
+    def lookup(self, req: dict) -> Optional[TuneResult]:
+        obj = _load_json(
+            self._plan_path(req),
+            lambda o: all(k in o["result"] for k in _REQUIRED_RESULT),
+        )
+        if obj is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return _result_from_dict(obj["result"])
+
+    def record(self, req: dict, res: TuneResult) -> None:
+        if res.plan is None:
+            return  # an aborted run is not knowledge worth persisting
+        _write_json(self._plan_path(req), {
+            "version": STORE_VERSION,
+            "request": req,
+            "result": _result_to_dict(res),
+        })
+
+    # -- cell tier -----------------------------------------------------
+    def _cell_path(self, ckey: str) -> str:
+        return os.path.join(self.cells_dir, ckey + ".json")
+
+    def _load_cell_tables(self, ckey: str):
+        obj = _load_json(
+            self._cell_path(ckey),
+            lambda o: all(isinstance(o[k], list) for k in
+                          ("terminal", "partial",
+                           "terminal_version", "partial_version")),
+        )
+        if obj is None:
+            return None
+        return (
+            _decode_tbl(obj["terminal"]),
+            _decode_tbl(obj["partial"]),
+            _decode_tbl(obj["terminal_version"]),
+            _decode_tbl(obj["partial_version"]),
+        )
+
+    def warm_cell(self, ckey: str, cache: TranspositionCache,
+                  include_learned: bool = False) -> int:
+        """Load the stored cell state into ``cache``; returns the number
+        of entries applied.  Exact-only by default (see module doc)."""
+        tables = self._load_cell_tables(ckey)
+        if tables is None:
+            return 0
+        t, p, tv, pv = tables
+        if not include_learned:
+            t = {k: v for k, v in t.items() if k not in tv}
+            p = {k: v for k, v in p.items() if k not in pv}
+            tv, pv = {}, {}
+        cache.apply_export((t, p, tv, pv))
+        return len(t) + len(p)
+
+    def sync_cell(self, ckey: str, cache: TranspositionCache,
+                  wm: Optional[Watermark]) -> Watermark:
+        """Merge ``cache``'s entries since ``wm`` into the stored cell
+        state and publish atomically; returns the new watermark.  Merge-
+        on-write: the CURRENT disk state is re-read and the delta folded
+        into it under exact-wins, so two daemons writing the same cell
+        converge (the ``os.replace`` race loser's delta rides its next
+        sync)."""
+        new_wm = cache.watermark()
+        entries, _full = cache.export_since(wm)
+        scratch = TranspositionCache()
+        tables = self._load_cell_tables(ckey)
+        if tables is not None:
+            t, p, tv, pv = tables
+            scratch.apply_export((t, p, tv, pv))
+        scratch.apply_export(entries)
+        _write_json(self._cell_path(ckey), {
+            "version": STORE_VERSION,
+            "terminal": _encode_tbl(scratch.terminal),
+            "partial": _encode_tbl(scratch.partial),
+            "terminal_version": _encode_tbl(scratch.terminal_version),
+            "partial_version": _encode_tbl(scratch.partial_version),
+        })
+        return new_wm
+
+    # -- stats ---------------------------------------------------------
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / total if total else 0.0,
+            "stored_plans": len(os.listdir(self.plans_dir)),
+            "stored_cells": len(os.listdir(self.cells_dir)),
+        }

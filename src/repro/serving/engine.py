@@ -63,12 +63,36 @@ class ServingEngine:
         step = make_serve_step(cfg, None, self.plan)
 
         @jax.jit
-        def _decode(params, cache, tokens, cur):
-            logits, cache = step(params, cache, tokens[:, None], cur)
+        def _decode(params, cache, tokens, cur, mask):
+            # cur: (B,) per-slot positions — every slot reads/writes its OWN
+            # length, so requests of different lengths can share the batch.
+            # mask: (B,) bool — only masked slots' cache entries (KV rows,
+            # conv/SSM state) are committed; the rest keep their old state,
+            # so a prefill feed for one slot can never clobber its
+            # neighbours' caches.
+            logits, new_cache = step(params, cache, tokens[:, None], cur)
+            new_cache = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(
+                    mask.reshape((1, -1) + (1,) * (new.ndim - 2)), new, old
+                ),
+                new_cache,
+                cache,
+            )
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return next_tok, cache
+            return next_tok, new_cache
+
+        @jax.jit
+        def _reset_slot(cache, slot):
+            # zero one slot's cache state on (re)assignment: stale KV past
+            # the new request's length is masked by position anyway, but
+            # mamba/hybrid conv+SSM state is NOT position-addressed — a new
+            # request must not inherit the previous occupant's state
+            return jax.tree_util.tree_map(
+                lambda c: c.at[:, slot].set(jnp.zeros_like(c[:, slot])), cache
+            )
 
         self._decode = _decode
+        self._reset_slot = _reset_slot
 
     # -- public API -----------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
@@ -77,13 +101,26 @@ class ServingEngine:
         return self._uid
 
     def run(self, max_steps: int = 1000) -> List[Request]:
-        """Drive until queue + slots drain (or max_steps)."""
+        """Drive until queue + slots drain (or max_steps).
+
+        Returns THIS call's completions only (not the engine-lifetime
+        accumulation) — requests still in flight when ``max_steps``
+        exhausts stay active and finish on the next ``run``; check
+        ``pending()`` for the still-active/queued counts."""
+        n0 = len(self.finished)
         for _ in range(max_steps):
             self._fill_slots()
             if all(r is None for r in self.active):
                 break
             self._step()
-        return self.finished
+        return self.finished[n0:]
+
+    def pending(self) -> dict:
+        """Requests not yet completed: in-slot actives and queued waiters."""
+        return {
+            "active": sum(r is not None for r in self.active),
+            "queued": len(self.queue),
+        }
 
     # -- internals -----------------------------------------------------------------
     def _fill_slots(self):
@@ -91,6 +128,7 @@ class ServingEngine:
             if self.active[i] is None and self.queue:
                 req = self.queue.pop(0)
                 self.active[i] = req
+                self.cache = self._reset_slot(self.cache, i)
                 # sequential prompt feed (prefill via decode steps keeps the
                 # engine single-kernel; bulk prefill uses make_prefill_step)
                 self.lengths[i] = 0
@@ -100,15 +138,27 @@ class ServingEngine:
                 self.tokens[i] = req.prompt[-1]
 
     def _single_feed(self, slot: int):
-        cur = jnp.int32(int(self.lengths[slot]))
-        toks = jnp.asarray(self.tokens)
-        _, self.cache = self._decode(self.params, self.cache, toks, cur)
+        # prefill one token for ONE slot: per-slot positions plus a one-hot
+        # commit mask — other slots' KV/state are untouched (pre-fix, this
+        # decoded the full batch at the new slot's position and clobbered
+        # every active neighbour's cache)
+        mask = np.zeros((self.slots,), bool)
+        mask[slot] = True
+        _, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.tokens),
+            jnp.asarray(self.lengths), jnp.asarray(mask),
+        )
         self.lengths[slot] += 1
 
     def _step(self):
-        cur = jnp.int32(int(self.lengths.max()))
-        toks = jnp.asarray(self.tokens)
-        next_tok, self.cache = self._decode(self.params, self.cache, toks, cur)
+        # one decode step for every ACTIVE slot at its own position
+        # (pre-fix: one shared cur = lengths.max() wrote every slot's KV at
+        # the longest slot's position)
+        mask = np.array([r is not None for r in self.active], bool)
+        next_tok, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.tokens),
+            jnp.asarray(self.lengths), jnp.asarray(mask),
+        )
         next_np = np.asarray(next_tok)
         for i, req in enumerate(self.active):
             if req is None:

@@ -118,6 +118,29 @@ def test_ensemble_advances_all_roots(mdp):
     assert names == [s.name for s in mdp.space.stages]
 
 
+def test_noise_is_lognormal_with_independent_uniforms():
+    """Box-Muller needs two INDEPENDENT uniforms.  Pre-fix, the radius
+    and angle of ``NoisyCostModel._noise`` both derived from the leading
+    bytes of one 8-byte digest (the angle's bytes were a prefix of the
+    radius's), correlating them and skewing the noise off the documented
+    log-normal; ``or 0.5`` also silently remapped a zero angle.  Post-fix
+    the log-noise over many plans is standard-normal to sampling
+    accuracy."""
+    from repro.core.autotuner import NoisyCostModel
+
+    sigma = 0.25
+    nm = NoisyCostModel(None, sigma=sigma, seed=7)
+    zs = [math.log(nm._noise(i)) / sigma for i in range(4000)]
+    n = len(zs)
+    mean = sum(zs) / n
+    std = math.sqrt(sum((z - mean) ** 2 for z in zs) / n)
+    assert abs(mean) < 4 / math.sqrt(n), mean
+    assert 0.93 < std < 1.07, std
+    # seeded determinism survives the fix
+    assert nm._noise(3) == NoisyCostModel(None, sigma, seed=7)._noise(3)
+    assert nm._noise(3) != NoisyCostModel(None, sigma, seed=8)._noise(3)
+
+
 def test_mcts_beats_or_matches_greedy_under_noise():
     """With a noisy cost model (the paper's setting) MCTS should not lose
     to greedy on average across seeds."""

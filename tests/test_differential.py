@@ -195,6 +195,32 @@ def test_parallel_identical_across_grid(ucb, simulation, reward):
 
 
 # ---------------------------------------------------------------------------
+# Service leg: the tuner daemon's COLD path (fresh store, warm-cell cache
+# mounted, shared machinery) must reproduce one-shot autotune bit-for-bit
+# — same plan, same exact cost, same decision trace — and the daemon's
+# WARM answer must equal its own cold one after a store round-trip.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cell", list(CELLS))
+def test_service_cold_path_identical_to_autotune(cell, tmp_path):
+    from repro.service import TunerService
+
+    arch, shape_name = CELLS[cell]
+    kw = dict(algo="mcts_1s", seed=2, n_standard=2, n_greedy=1)
+    ref = autotune(arch, shape_name, **kw)
+
+    svc = TunerService(str(tmp_path / "store"), log=lambda *a: None)
+    cold = svc.handle(dict(arch=arch, shape=shape_name, **kw))
+    warm = svc.handle(dict(arch=arch, shape=shape_name, **kw))
+    svc.shutdown()
+
+    assert cold["served"] == "search" and warm["served"] == "store"
+    for out in (cold, warm):
+        assert out["result"]["plan"] == ref.plan.to_dict()
+        assert out["result"]["cost"] == ref.cost
+        assert out["result"]["decisions"] == ref.decisions
+
+
+# ---------------------------------------------------------------------------
 # Default flip: with the grid green, the array engine is the default
 # ---------------------------------------------------------------------------
 def test_array_engine_is_the_default():

@@ -302,6 +302,39 @@ def test_fleet_watchdog_kills_stalled_worker(tmp_path):
         assert fleet.n_timeouts == 1 and fleet.n_worker_restarts == 1
 
 
+def test_sweep_resume_retries_failed_measurements(tmp_path):
+    """A stored sweep row whose measurement FAILED must not mark its key
+    done: pre-fix, ``stored_keys`` counted every stored row, so a
+    transient fleet failure (``measured_step_s: null``) was never
+    re-measured on resume."""
+    from benchmarks.sweep import run_sweep, stored_keys
+    from repro.core.measure_stub import failing_measure
+
+    spec = {
+        "name": "retry",
+        "defaults": {"algo": "mcts_1s", "n_standard": 2, "n_greedy": 1},
+        "matrix": {"cell": [list(CELL)]},
+    }
+    common = dict(results_dir=str(tmp_path), measure="stub", workers=1,
+                  log=lambda *a: None)
+    cache_dir = str(tmp_path / "mc")
+    rows1 = run_sweep(spec, fleet_kwargs={
+        "target": failing_measure, "max_retries": 0, "cache_dir": cache_dir,
+    }, **common)
+    assert rows1[0]["measured_step_s"] is None
+    assert rows1[0]["measure"]["failed"]
+    out_path = os.path.join(str(tmp_path), "retry.jsonl")
+    assert stored_keys(out_path) == set()  # a failed row is NOT done
+    # resume with a healthy fleet: the row re-runs and sticks
+    rows2 = run_sweep(spec, fleet_kwargs={"cache_dir": cache_dir}, **common)
+    assert len(rows2) == 1, "resume skipped the failed row"
+    assert rows2[0]["measured_step_s"] is not None
+    assert stored_keys(out_path) == {rows2[0]["key"]}
+    # and a THIRD resume now runs nothing
+    assert run_sweep(spec, fleet_kwargs={"cache_dir": cache_dir},
+                     **common) == []
+
+
 def test_fleet_exhausted_retries_fail_without_raising(tmp_path):
     from repro.core.measure import make_request
     from repro.core.measure_stub import failing_measure

@@ -1,0 +1,307 @@
+"""Tuner-as-a-service: PlanStore durability + daemon behaviour (XLA-free).
+
+Covers the ISSUE-7 store contract: atomic-published entries quarantined
+when corrupt, exact-wins convergence across writers, warm starts that
+never change results, plan-tier hits with zero search, and the socket
+protocol end to end (in-process server thread)."""
+import json
+import os
+import threading
+
+import pytest
+
+from repro.core.autotuner import autotune
+from repro.core.engine.cache import TranspositionCache
+from repro.service import (
+    PlanStore,
+    TunerService,
+    canonical_request,
+    cell_key,
+    serve_forever,
+)
+from repro.service.store import request_key
+
+CELL = ("granite-3-2b", "train_4k")
+REQ = dict(arch=CELL[0], shape=CELL[1], algo="mcts_1s", seed=0,
+           n_standard=2, n_greedy=1)
+
+
+def _service(tmp_path, **kw):
+    kw.setdefault("log", lambda *a: None)
+    return TunerService(str(tmp_path / "store"), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Store tier: round-trip, quarantine, exact-wins
+# ---------------------------------------------------------------------------
+def test_plan_roundtrip_bit_identical(tmp_path):
+    store = PlanStore(str(tmp_path / "store"))
+    req = canonical_request(**REQ)
+    assert store.lookup(req) is None
+    res = autotune(CELL[0], CELL[1], algo="mcts_1s", seed=0,
+                   n_standard=2, n_greedy=1)
+    store.record(req, res)
+    hit = store.lookup(req)
+    assert hit is not None and hit.from_store
+    # JSON float round-trip is exact (shortest repr), so the stored
+    # result is the original bit-for-bit
+    assert hit.plan == res.plan
+    assert hit.cost == res.cost
+    assert hit.decisions == res.decisions
+
+
+def test_request_key_excludes_execution_knobs():
+    # engine/parallel/n_workers never reach the canonical request — the
+    # engines are certified bit-identical, so one stored plan answers all
+    a = canonical_request(**REQ)
+    b = canonical_request(**REQ, engine="reference", parallel=True,
+                          n_workers=7)
+    assert request_key(a) == request_key(b)
+    c = canonical_request(**dict(REQ, seed=1))
+    assert request_key(a) != request_key(c)
+
+
+def test_corrupt_plan_entry_quarantined(tmp_path):
+    store = PlanStore(str(tmp_path / "store"))
+    req = canonical_request(**REQ)
+    path = store._plan_path(req)
+    with open(path, "w") as f:
+        f.write('{"version": 1, "result": {"cost"')  # torn write
+    assert store.lookup(req) is None
+    assert not os.path.exists(path)  # quarantined, not served forever
+    # schema-violating but valid JSON is quarantined too
+    with open(path, "w") as f:
+        json.dump({"version": 1, "result": {}}, f)
+    assert store.lookup(req) is None
+    assert not os.path.exists(path)
+
+
+def test_corrupt_cell_entry_quarantined(tmp_path):
+    store = PlanStore(str(tmp_path / "store"))
+    ckey = cell_key(canonical_request(**REQ))
+    cache = TranspositionCache()
+    cache.terminal[(1, 2, 3)] = 0.5
+    store.sync_cell(ckey, cache, None)
+    path = store._cell_path(ckey)
+    with open(path, "w") as f:
+        f.write('{"version": 1, "terminal": [[')  # truncated
+    fresh = TranspositionCache()
+    assert store.warm_cell(ckey, fresh) == 0
+    assert fresh.n_entries == 0
+    assert not os.path.exists(path)
+    # and the next sync republishes cleanly from the in-memory cache
+    store.sync_cell(ckey, cache, None)
+    assert store.warm_cell(ckey, fresh) == 1
+    assert fresh.terminal[(1, 2, 3)] == 0.5
+
+
+def test_two_writers_converge_exact_wins(tmp_path):
+    """Two daemons race on one cell: whatever the sync order, a learned
+    prediction never shadows an exact analytic entry on disk."""
+    store = PlanStore(str(tmp_path / "store"))
+    ckey = "cafecafecafecafecafe"
+    exact = TranspositionCache()
+    exact.terminal[(0, 1)] = 0.5
+    learned = TranspositionCache()
+    learned.terminal[(0, 1)] = 0.9
+    learned.terminal_version[(0, 1)] = 3
+    learned.terminal[(0, 2)] = 0.7  # untagged entry unique to this writer
+
+    for first, second in ((exact, learned), (learned, exact)):
+        for f in os.listdir(store.cells_dir):
+            os.remove(os.path.join(store.cells_dir, f))
+        store.sync_cell(ckey, first, None)
+        store.sync_cell(ckey, second, None)
+        merged = TranspositionCache()
+        store.warm_cell(ckey, merged, include_learned=True)
+        assert merged.terminal[(0, 1)] == 0.5, "learned shadowed exact"
+        assert (0, 1) not in merged.terminal_version
+        assert merged.terminal[(0, 2)] == 0.7  # both writers' entries kept
+
+
+def test_warm_start_excludes_learned_by_default(tmp_path):
+    store = PlanStore(str(tmp_path / "store"))
+    cache = TranspositionCache()
+    cache.terminal[(0, 1)] = 0.5
+    cache.terminal[(0, 2)] = 0.9
+    cache.terminal_version[(0, 2)] = 4  # a model prediction
+    store.sync_cell("k" * 20, cache, None)
+    fresh = TranspositionCache()
+    # an analytic run must only see exact entries (values change nothing,
+    # so plan/cost/decisions stay bit-identical to a cold run)
+    assert store.warm_cell("k" * 20, fresh) == 1
+    assert fresh.terminal == {(0, 1): 0.5}
+    both = TranspositionCache()
+    assert store.warm_cell("k" * 20, both, include_learned=True) == 2
+    assert both.terminal_version == {(0, 2): 4}
+
+
+def test_sync_cell_is_incremental(tmp_path):
+    store = PlanStore(str(tmp_path / "store"))
+    cache = TranspositionCache()
+    cache.terminal[(0,)] = 1.0
+    wm = store.sync_cell("a" * 20, cache, None)
+    cache.terminal[(1,)] = 2.0
+    # second sync ships only the delta but the stored state keeps both
+    store.sync_cell("a" * 20, cache, wm)
+    fresh = TranspositionCache()
+    assert store.warm_cell("a" * 20, fresh) == 2
+
+
+# ---------------------------------------------------------------------------
+# Daemon: plan-tier hits, warm cells, restart persistence
+# ---------------------------------------------------------------------------
+def test_repeat_request_is_store_hit_zero_search(tmp_path):
+    svc = _service(tmp_path)
+    out1 = svc.handle(dict(REQ))
+    out2 = svc.handle(dict(REQ))
+    assert out1["served"] == "search" and out2["served"] == "store"
+    assert svc.n_searches == 1  # the repeat ran no search
+    assert out2["result"]["from_store"]
+    assert out2["result"]["plan"] == out1["result"]["plan"]
+    assert out2["result"]["cost"] == out1["result"]["cost"]
+    svc.shutdown()
+
+
+def test_store_warm_starts_fresh_process(tmp_path):
+    """A store populated by one service answers a FRESH service's repeat
+    request with no search at all, and warm-starts the cell cache for a
+    new (different-seed) request without changing its result."""
+    svc1 = _service(tmp_path)
+    out1 = svc1.handle(dict(REQ))
+    svc1.shutdown()
+
+    svc2 = _service(tmp_path)
+    out2 = svc2.handle(dict(REQ))
+    assert out2["served"] == "store" and svc2.n_searches == 0
+    assert out2["result"]["plan"] == out1["result"]["plan"]
+
+    # new seed on the same cell: searches, but from a warmed cache —
+    # and the result matches a from-scratch run bit-for-bit
+    out3 = svc2.handle(dict(REQ, seed=1))
+    assert out3["served"] == "search"
+    ckey = cell_key(canonical_request(**REQ))
+    assert svc2.cells[ckey].cache.hits > 0  # the warm entries were used
+    ref = autotune(CELL[0], CELL[1], algo="mcts_1s", seed=1,
+                   n_standard=2, n_greedy=1)
+    assert out3["result"]["plan"] == ref.plan.to_dict()
+    assert out3["result"]["cost"] == ref.cost
+    assert out3["result"]["decisions"] == ref.decisions
+    svc2.shutdown()
+
+
+def test_socket_protocol_roundtrip(tmp_path):
+    from repro.launch.tune_serve import TuneClient
+
+    svc = _service(tmp_path)
+    sock = str(tmp_path / "tuner.sock")
+    t = threading.Thread(
+        target=serve_forever, args=(svc, sock), kwargs={"max_requests": 2},
+        daemon=True,
+    )
+    t.start()
+    deadline = 50
+    while not os.path.exists(sock) and deadline:
+        deadline -= 1
+        threading.Event().wait(0.1)
+    client = TuneClient(sock)
+    assert client.ping() == {"ok": True, "pong": True}
+    out1 = client.tune(CELL[0], CELL[1], algo="mcts_1s", seed=0,
+                       n_standard=2, n_greedy=1)
+    assert out1["ok"] and out1["served"] == "search"
+    out2 = client.tune(CELL[0], CELL[1], algo="mcts_1s", seed=0,
+                       n_standard=2, n_greedy=1)
+    assert out2["ok"] and out2["served"] == "store"
+    assert out2["result"]["plan"] == out1["result"]["plan"]
+    t.join(timeout=30)
+    assert not t.is_alive()
+
+
+def test_bad_request_never_kills_daemon(tmp_path):
+    from repro.launch.tune_serve import TuneClient
+
+    svc = _service(tmp_path)
+    sock = str(tmp_path / "tuner.sock")
+    t = threading.Thread(
+        target=serve_forever, args=(svc, sock), kwargs={"max_requests": 1},
+        daemon=True,
+    )
+    t.start()
+    deadline = 50
+    while not os.path.exists(sock) and deadline:
+        deadline -= 1
+        threading.Event().wait(0.1)
+    client = TuneClient(sock)
+    bad = client.call({"op": "tune", "arch": "no-such-arch", "shape": "x"})
+    assert not bad["ok"] and "no-such-arch" in bad["error"]
+    good = client.tune(CELL[0], CELL[1], algo="mcts_1s", seed=0,
+                       n_standard=2, n_greedy=1)
+    assert good["ok"]
+    t.join(timeout=30)
+
+
+# ---------------------------------------------------------------------------
+# Shared pinned pool across runs
+# ---------------------------------------------------------------------------
+def test_shared_pool_reused_across_runs(tmp_path):
+    svc = _service(tmp_path, parallel=True, n_workers=2)
+    out1 = svc.handle(dict(REQ))
+    pids = {w.proc.pid for w in svc.pool._workers}
+    out2 = svc.handle(dict(REQ, seed=1))
+    assert {w.proc.pid for w in svc.pool._workers} == pids
+    assert svc.pool.n_worker_restarts == 0
+    # parallel shared-pool results == sequential one-shot results
+    for out, seed in ((out1, 0), (out2, 1)):
+        ref = autotune(CELL[0], CELL[1], algo="mcts_1s", seed=seed,
+                       n_standard=2, n_greedy=1)
+        assert out["result"]["plan"] == ref.plan.to_dict()
+        assert out["result"]["cost"] == ref.cost
+        assert out["result"]["decisions"] == ref.decisions
+    svc.shutdown()
+    assert svc.pool is None
+
+
+def test_pool_rebind_direct():
+    """PinnedWorkerPool.rebind repoints live workers at a new run's trees:
+    same processes, same results as a fresh pool."""
+    from repro.core.autotuner import make_mdp
+    from repro.core.engine.cache import CachedMDP
+    from repro.core.ensemble import ProTuner
+    from repro.core.engine.workers import PinnedWorkerPool
+    from repro.core.mcts import MCTSConfig
+
+    mc = MCTSConfig(iters_per_decision=4)
+    pool = PinnedWorkerPool([], CachedMDP(make_mdp(*CELL)), n_workers=2)
+    assert len(pool._workers) == 2  # empty trees keep the requested width
+    try:
+        pids = {w.proc.pid for w in pool._workers}
+        results = []
+        for seed in (0, 1):
+            tuner = ProTuner(CachedMDP(make_mdp(*CELL)), n_standard=2,
+                             n_greedy=1, mcts_config=mc, seed=seed,
+                             worker_pool=pool)
+            results.append(tuner.run())
+        assert {w.proc.pid for w in pool._workers} == pids
+        for seed, res in zip((0, 1), results):
+            ref = ProTuner(CachedMDP(make_mdp(*CELL)), n_standard=2,
+                           n_greedy=1, mcts_config=mc, seed=seed).run()
+            assert res.plan == ref.plan and res.cost == ref.cost
+            assert [d["action"] for d in res.decisions] == [
+                d["action"] for d in ref.decisions]
+    finally:
+        pool.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# autotune(plan_store=) one-shot convenience
+# ---------------------------------------------------------------------------
+def test_autotune_plan_store_kwarg(tmp_path):
+    store = PlanStore(str(tmp_path / "store"))
+    res1 = autotune(CELL[0], CELL[1], algo="mcts_1s", seed=0,
+                    n_standard=2, n_greedy=1, plan_store=store)
+    assert not res1.from_store
+    res2 = autotune(CELL[0], CELL[1], algo="mcts_1s", seed=0,
+                    n_standard=2, n_greedy=1, plan_store=store)
+    assert res2.from_store
+    assert res2.plan == res1.plan and res2.cost == res1.cost
+    assert store.stats()["hits"] == 1

@@ -83,6 +83,7 @@ def run_algo(
     n_greedy: int = 1,
     engine: str = "array",
     cost: str = "analytic",
+    pricing: Optional[str] = None,
 ):
     """One search run under the paper protocol (scaled budgets).
 
@@ -95,8 +96,11 @@ def run_algo(
     for the paper-faithful Node trees.  ``cost`` selects the serving layer
     of the cost stack (``"analytic"`` exact — the default for every
     published figure — or ``"learned"``/``"hybrid"`` online learned-cost
-    serving; see ``repro.core.engine.serving``)."""
-    mdp = make_mdp(arch, shape, noise_sigma=noise_sigma, noise_seed=noise_seed)
+    serving; see ``repro.core.engine.serving``).  ``pricing`` selects the
+    analytic kernel (None exact columnar, ``"jit"`` the jax-jitted path
+    with its versioned tag; see ``cost_model.py``)."""
+    mdp = make_mdp(arch, shape, noise_sigma=noise_sigma, noise_seed=noise_seed,
+                   pricing=pricing)
     if algo.startswith("mcts"):
         from repro.core.ensemble import ProTuner
 

@@ -29,7 +29,23 @@ A cost-kernel microbenchmark rides along per cell (``kernel_*`` columns):
 one deduplicated batch of random unique plans priced scalar-batched vs
 columnar, isolating the kernel win from engine bookkeeping — at Table-1
 miss-batch sizes the column math clears the scalar replay by whatever the
-end-to-end legs can't show once cache hit rates pass 99%.
+end-to-end legs can't show once cache hit rates pass 99%.  A second
+microbench (``kernel_jit_*`` columns) compares all THREE pricing paths —
+scalar replay, columnar kernel, jax-jitted kernel — on the
+``cost_columns`` seam (pre-encoded ``PlanColumns``, so shared dedup/encode
+overhead is out of the picture) at batch sizes 1/16/256: batch 1 shows the
+jax dispatch floor that keeps ``JIT_MIN_BATCH`` above 1, batch 256 is the
+generation-sized burst where the jitted kernel must beat the columnar one.
+
+Gate policy (``--check``): gates split into DETERMINISTIC ones (identical
+results across legs, byte counters, restart counts — exactly reproducible
+for fixed seeds, so any miss is a real regression and fails immediately)
+and WALL-CLOCK ratio ones (speedups, kernel crossovers — subject to CI
+cgroup throttling bursts that can halve a leg).  A wall-clock miss
+triggers ONE full re-run of the benchmark: the check fails only if a
+wall-clock gate misses on both runs (or a deterministic gate misses at
+all).  This keeps the flake rate quadratically small without ever
+loosening the deterministic guarantees.
 
 Reported per cell: iterations/sec per leg, cache hits/misses, and three
 speedups — ``speedup`` (columnar array vs reference, the end-to-end win),
@@ -78,6 +94,10 @@ CELLS = [
 # regression (e.g. the kernel engaging where it loses badly).
 COLUMNAR_LEG_FLOOR = 0.5
 KERNEL_BATCH = 256  # microbench batch: a Table-1 first-round miss burst
+# kernel_jit microbench grid: the jax dispatch floor (1), the columnar
+# dispatch threshold (16), and a generation/miss-burst width (256) — the
+# batch the jit-vs-columnar gate runs at
+KERNEL_JIT_BATCHES = (1, 16, 256)
 
 # parallel-leg gates.  The BYTE gates are deterministic (pickled sizes for
 # fixed seeds) and carry the O(round) claim: consecutive steady-state
@@ -145,6 +165,57 @@ def bench_kernel(cell, *, n_plans: int = KERNEL_BATCH, reps: int = 5) -> dict:
         "kernel_columnar_us_per_plan": t_c / len(plans) * 1e6,
         "kernel_speedup": t_s / t_c,
     }
+
+
+def bench_kernel_jit(cell, *, reps: int = 5) -> dict:
+    """Three-way pricing-path comparison on the ``cost_columns`` seam:
+    scalar replay vs columnar kernel vs jax-jitted kernel over the SAME
+    pre-encoded ``PlanColumns`` batches at sizes 1/16/256 (adjacent
+    best-of-reps measurements, dedup/encode excluded — the cleanest view
+    of each kernel's own cost).  The jitted model is warmed first so XLA
+    compiles never land in a timed rep.  Values are certified along the
+    way: scalar == columnar exactly, jit within JIT_RTOL."""
+    from repro.core.cost_model import JIT_RTOL, PlanColumns
+
+    arch, shape = cell
+    mdp = make_mdp(arch, shape)
+    space = mdp.space
+    rng = random.Random(0)
+    seen, plans = set(), []
+    while len(plans) < max(KERNEL_JIT_BATCHES):
+        p = space.random_plan(rng)
+        if p not in seen:
+            seen.add(p)
+            plans.append(p)
+    cfg, shp, mesh = space.cfg, space.shape, space.mesh
+    # min_batch=1 on the kernel models so batch 1 really measures the
+    # kernels (the production dispatch would route it to scalar replay)
+    models = {
+        "scalar": AnalyticCostModel(cfg, shp, mesh, columnar=False),
+        "columnar": AnalyticCostModel(cfg, shp, mesh, columnar_min_batch=1),
+        "jit": AnalyticCostModel(cfg, shp, mesh, pricing="jit",
+                                 columnar_min_batch=1),
+    }
+    out = {"kernel_jit_batches": list(KERNEL_JIT_BATCHES)}
+    for b in KERNEL_JIT_BATCHES:
+        cols = PlanColumns.from_plans(plans[:b])
+        vals = {}
+        for name, m in models.items():
+            vals[name] = m.cost_columns(cols)  # warm: ctx + jit compile
+            t = min(_timed(lambda: m.cost_columns(cols)) for _ in range(reps))
+            out[f"kernel_{name}_us_per_plan_b{b}"] = t / b * 1e6
+        assert vals["scalar"] == vals["columnar"]
+        import numpy as _np
+        _np.testing.assert_allclose(
+            _np.asarray(vals["jit"]), _np.asarray(vals["columnar"]),
+            rtol=JIT_RTOL, atol=0.0)
+        out[f"kernel_jit_vs_columnar_b{b}"] = (
+            out[f"kernel_columnar_us_per_plan_b{b}"]
+            / out[f"kernel_jit_us_per_plan_b{b}"])
+        out[f"kernel_jit_vs_scalar_b{b}"] = (
+            out[f"kernel_scalar_us_per_plan_b{b}"]
+            / out[f"kernel_jit_us_per_plan_b{b}"])
+    return out
 
 
 def _timed(fn) -> float:
@@ -265,6 +336,7 @@ def bench_cell(cell, *, iters: int, n_standard: int, n_greedy: int,
         == [d["action"] for d in res_bat.decisions]
         == [d["action"] for d in res_arr.decisions])
     out.update(bench_kernel(cell))
+    out.update(bench_kernel_jit(cell))
     out.update(bench_parallel(cell, iters=iters, n_standard=n_standard,
                               n_greedy=n_greedy, reps=max(reps - 1, 2)))
 
@@ -292,6 +364,15 @@ def bench_cell(cell, *, iters: int, n_standard: int, n_greedy: int,
              f"{out['kernel_batch']}-plan miss batches "
              f"({out['kernel_scalar_us_per_plan']:.1f} -> "
              f"{out['kernel_columnar_us_per_plan']:.1f} us/plan)")
+    csv_line(f"engine_throughput_kernel_jit[{name}]",
+             out["kernel_jit_us_per_plan_b256"],
+             "; ".join(
+                 f"b={b}: scalar {out[f'kernel_scalar_us_per_plan_b{b}']:.1f}"
+                 f" / columnar {out[f'kernel_columnar_us_per_plan_b{b}']:.1f}"
+                 f" / jit {out[f'kernel_jit_us_per_plan_b{b}']:.1f} us/plan"
+                 f" (jit {out[f'kernel_jit_vs_columnar_b{b}']:.2f}x vs"
+                 f" columnar)"
+                 for b in KERNEL_JIT_BATCHES))
     csv_line(f"engine_throughput_speedup[{name}]", 0.0,
              f"{out['speedup']:.1f}x vs reference; "
              f"{out['speedup_batched_vs_scalar']:.2f}x batched-vs-scalar; "
@@ -300,6 +381,65 @@ def bench_cell(cell, *, iters: int, n_standard: int, n_greedy: int,
              f"hit_rate={out['cache_hit_rate']:.3f}; "
              f"evals_saved={out['evals_saved']}; same={out['same_result']}")
     return out
+
+
+def check_rows(rows) -> tuple:
+    """Evaluate the CI gates on benchmarked rows.  Returns
+    ``(hard, soft)`` failure-message lists: ``hard`` gates are
+    DETERMINISTIC (identical plans/costs/decisions across legs, payload
+    byte counters, restart counts — exactly reproducible for fixed seeds,
+    never retried), ``soft`` gates are wall-clock ratios (retried once by
+    the ``--check`` driver before failing; see the module docstring)."""
+    hard, soft = [], []
+    for row in rows:
+        if not row["same_result"]:
+            hard.append(f"{row['cell']}: engines diverged")
+    r0 = rows[0]
+    # --- deterministic pinned-pool gates (byte counters, fixed seeds) ---
+    if not r0["parallel_same_result"]:
+        hard.append(f"{r0['cell']}: parallel diverged from sequential")
+    if r0["parallel_restarts"]:
+        hard.append(
+            f"{r0['cell']}: {r0['parallel_restarts']} unexpected "
+            f"worker restarts")
+    if r0["parallel_submit_round_ratio"] > PARALLEL_ROUND_RATIO:
+        hard.append(
+            f"{r0['cell']}: steady-state submit rounds diverged "
+            f"({r0['parallel_submit_round_ratio']:.2f}x > "
+            f"{PARALLEL_ROUND_RATIO}) — submit payload no longer "
+            f"round-sized")
+    if r0["parallel_max_round_vs_snapshot"] >= 1.0:
+        hard.append(
+            f"{r0['cell']}: a forward delta reached snapshot size "
+            f"({r0['parallel_max_round_vs_snapshot']:.2f}x) — the "
+            f"submit side is re-shipping whole state")
+    # --- wall-clock ratio gates (retry-once) ---
+    if r0["speedup"] < 1.0:
+        soft.append(
+            f"{r0['cell']}: array engine slower than reference "
+            f"({r0['speedup']:.2f}x)")
+    if r0["kernel_speedup"] < 1.0:
+        soft.append(
+            f"{r0['cell']}: columnar kernel slower than the "
+            f"scalar replay on {r0['kernel_batch']}-plan batches "
+            f"({r0['kernel_speedup']:.2f}x)")
+    b = max(KERNEL_JIT_BATCHES)
+    if r0[f"kernel_jit_vs_columnar_b{b}"] < 1.0:
+        soft.append(
+            f"{r0['cell']}: jitted kernel slower than columnar at "
+            f"batch {b} ({r0[f'kernel_jit_vs_columnar_b{b}']:.2f}x)")
+    if r0["speedup_columnar_vs_batched"] < COLUMNAR_LEG_FLOOR:
+        soft.append(
+            f"{r0['cell']}: columnar leg regressed end-to-end "
+            f"({r0['speedup_columnar_vs_batched']:.2f}x < "
+            f"{COLUMNAR_LEG_FLOOR})")
+    if (r0["speedup_parallel_vs_sequential"] < 1.0 / PARALLEL_WALL_RATIO
+            and r0["parallel_wall_s"] > PARALLEL_WALL_FLOOR_S):
+        soft.append(
+            f"{r0['cell']}: parallel leg catastrophically slow "
+            f"({r0['speedup_parallel_vs_sequential']:.2f}x of "
+            f"sequential over {r0['parallel_wall_s']:.2f}s)")
+    return hard, soft
 
 
 def main(iters: int = 384, n_standard: int = 15, n_greedy: int = 1,
@@ -332,56 +472,22 @@ if __name__ == "__main__":
           f"cache hits {r['cache_hits']}, evals saved {r['evals_saved']}, "
           f"identical result: {r['same_result']}")
     if args.check:
-        bad = []
-        for row in rows:
-            if not row["same_result"]:
-                bad.append(f"{row['cell']}: engines diverged")
-        if rows[0]["speedup"] < 1.0:
-            bad.append(
-                f"{rows[0]['cell']}: array engine slower than reference "
-                f"({rows[0]['speedup']:.2f}x)")
-        if rows[0]["kernel_speedup"] < 1.0:
-            bad.append(
-                f"{rows[0]['cell']}: columnar kernel slower than the "
-                f"scalar replay on {rows[0]['kernel_batch']}-plan batches "
-                f"({rows[0]['kernel_speedup']:.2f}x)")
-        if rows[0]["speedup_columnar_vs_batched"] < COLUMNAR_LEG_FLOOR:
-            bad.append(
-                f"{rows[0]['cell']}: columnar leg regressed end-to-end "
-                f"({rows[0]['speedup_columnar_vs_batched']:.2f}x < "
-                f"{COLUMNAR_LEG_FLOOR})")
-        # pinned-pool gates on the decode cell.  Byte gates first — they
-        # are DETERMINISTIC (pickled sizes for fixed seeds), so they can
-        # be tight; the wall gate is best-of-reps with a ratio + absolute
-        # floor because timings on this class of box swing ±10-20%.
-        r0 = rows[0]
-        if not r0["parallel_same_result"]:
-            bad.append(f"{r0['cell']}: parallel diverged from sequential")
-        if r0["parallel_restarts"]:
-            bad.append(
-                f"{r0['cell']}: {r0['parallel_restarts']} unexpected "
-                f"worker restarts")
-        if r0["parallel_submit_round_ratio"] > PARALLEL_ROUND_RATIO:
-            bad.append(
-                f"{r0['cell']}: steady-state submit rounds diverged "
-                f"({r0['parallel_submit_round_ratio']:.2f}x > "
-                f"{PARALLEL_ROUND_RATIO}) — submit payload no longer "
-                f"round-sized")
-        if r0["parallel_max_round_vs_snapshot"] >= 1.0:
-            bad.append(
-                f"{r0['cell']}: a forward delta reached snapshot size "
-                f"({r0['parallel_max_round_vs_snapshot']:.2f}x) — the "
-                f"submit side is re-shipping whole state")
-        if (r0["speedup_parallel_vs_sequential"] < 1.0 / PARALLEL_WALL_RATIO
-                and r0["parallel_wall_s"] > PARALLEL_WALL_FLOOR_S):
-            bad.append(
-                f"{r0['cell']}: parallel leg catastrophically slow "
-                f"({r0['speedup_parallel_vs_sequential']:.2f}x of "
-                f"sequential over {r0['parallel_wall_s']:.2f}s)")
+        hard, soft = check_rows(rows)
+        if not hard and soft:
+            # Retry-once-on-miss: wall-clock ratio gates are subject to CI
+            # throttling bursts, so one miss buys exactly one full re-run;
+            # only a second miss fails.  Deterministic gates (hard) never
+            # retry — a miss there is a real regression.
+            print("# wall-clock gate miss, retrying once: "
+                  + "; ".join(soft))
+            rows = main(**kw)
+            hard, soft = check_rows(rows)
+        bad = hard + soft
         if bad:
             print("# CHECK FAILED: " + "; ".join(bad))
             sys.exit(1)
         print("# check passed: array >= reference, columnar kernel >= "
-              "scalar replay, columnar leg holds the batched leg, all "
-              "legs identical on the decode cell, and the pinned pool "
-              "matched sequential with round-sized submit payloads")
+              "scalar replay, jit kernel >= columnar at batch "
+              f"{max(KERNEL_JIT_BATCHES)}, columnar leg holds the batched "
+              "leg, all legs identical on the decode cell, and the pinned "
+              "pool matched sequential with round-sized submit payloads")

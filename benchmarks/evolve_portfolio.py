@@ -1,0 +1,159 @@
+"""Evolve vs MCTS at equal eval budget — the PR-8 acceptance benchmark.
+
+Per Table-1 headline cell (the decode cell and the MoE train cell):
+
+1. run the MCTS ensemble (``mcts_1s`` scaled protocol) and record its
+   final analytic cost and its unique-eval consumption ``E``;
+2. populate a throwaway ``PlanStore`` the same way production would —
+   ``autotune(..., plan_store=...)`` runs of the cheap baselines (beam,
+   greedy) record their plans;
+3. run ``algo="evolve"`` with the store's plans seeding generation 0 and
+   ``max_evals=E`` — the SAME unique-plan pricing budget MCTS consumed
+   (evolve checks the budget between generations, so the overshoot is at
+   most one population; actual consumption is in the artifact);
+4. run ``algo="portfolio"`` under the same budget for the artifact (its
+   members share one cache, so the budget is portfolio-wide).
+
+The headline number is ``evolve_vs_mcts`` — the acceptance gate
+(``--check``) requires it ≤ EVOLVE_MCTS_RATIO on BOTH cells: the
+evolutionary searcher over complete plans, warm-started from stored
+knowledge, must match the tree searcher on equal footing.  Search and
+pricing are deterministic for fixed seeds, so the ratio is exactly
+reproducible — this is a hard gate, not a wall-clock one.
+
+    PYTHONPATH=src python -m benchmarks.evolve_portfolio
+    PYTHONPATH=src python -m benchmarks.evolve_portfolio --quick --check
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+
+from benchmarks.common import ENGINE_STAMP, csv_line, emit, run_algo
+from repro.core.autotuner import autotune, make_mdp
+from repro.core.engine.backend import resolve_backend
+from repro.service.store import PlanStore
+
+# headline cells (paper Table 1): decode first, then the MoE train cell
+CELLS = [
+    ("decode", "granite-3-2b", "decode_32k"),
+    ("moe_train", "granite-moe-1b-a400m", "train_4k"),
+]
+
+# acceptance: evolve's final analytic cost within 5% of the MCTS ensemble's
+# at the same unique-eval budget (deterministic for fixed seeds)
+EVOLVE_MCTS_RATIO = 1.05
+
+# the MCTS reference configuration: the scaled ``1s`` ensemble protocol
+MCTS_ALGO = "mcts_1s"
+
+# store-seeding baselines: cheap searches whose recorded plans warm
+# generation 0 (production equivalent: whatever anyone tuned on the cell)
+SEED_ALGOS = ("beam", "greedy")
+
+
+def bench_cell(name, arch, shape, *, store_dir, n_standard=15, n_greedy=1,
+               seed=0) -> dict:
+    # 1. the MCTS reference run sets the eval budget
+    t0 = time.perf_counter()
+    res_m, _ = run_algo(arch, shape, MCTS_ALGO, seed=seed,
+                        n_standard=n_standard, n_greedy=n_greedy)
+    wall_m = time.perf_counter() - t0
+    budget = res_m.n_evals
+
+    # 2. populate the plan store through the production path
+    store = PlanStore(store_dir)
+    for algo in SEED_ALGOS:
+        autotune(arch, shape, algo=algo, seed=seed, plan_store=store)
+    seeds = store.seed_plans(arch=arch, shape=shape, mesh="single")
+
+    # 3. evolve at the same budget, generation 0 warm-started from the store
+    t0 = time.perf_counter()
+    res_e = resolve_backend("evolve").run(
+        make_mdp(arch, shape), seed=seed, max_evals=budget,
+        seed_plans=seeds)
+    wall_e = time.perf_counter() - t0
+
+    # 4. portfolio at the same (shared) budget, same seeding
+    t0 = time.perf_counter()
+    res_p = resolve_backend("portfolio").run(
+        make_mdp(arch, shape), seed=seed, max_evals=budget,
+        seed_plans=seeds, n_standard=4, n_greedy=1)
+    wall_p = time.perf_counter() - t0
+
+    row = {
+        "cell": name,
+        "arch": arch,
+        "shape": shape,
+        "engine": ENGINE_STAMP,
+        "mcts_algo": MCTS_ALGO,
+        "n_trees": n_standard + n_greedy,
+        "eval_budget": budget,
+        "mcts_cost": res_m.cost,
+        "mcts_wall_s": wall_m,
+        "n_seed_plans": len(seeds),
+        "seed_algos": list(SEED_ALGOS),
+        "evolve_cost": res_e.cost,
+        "evolve_evals": res_e.n_evals,
+        "evolve_generations": len(res_e.decisions),
+        "evolve_wall_s": wall_e,
+        "evolve_vs_mcts": res_e.cost / res_m.cost,
+        "portfolio_cost": res_p.cost,
+        "portfolio_evals": res_p.n_evals,
+        "portfolio_members_run": len(res_p.decisions),
+        "portfolio_winner": next(
+            d["member"] for d in res_p.decisions if d["winner"]),
+        "portfolio_wall_s": wall_p,
+        "portfolio_vs_mcts": res_p.cost / res_m.cost,
+    }
+    csv_line(
+        f"evolve_portfolio[{name}]", wall_e * 1e6,
+        f"evolve {row['evolve_vs_mcts']:.4f}x vs {MCTS_ALGO} at "
+        f"{budget} evals (evolve used {res_e.n_evals}, "
+        f"{row['evolve_generations']} gens, {len(seeds)} store seeds); "
+        f"portfolio {row['portfolio_vs_mcts']:.4f}x "
+        f"(winner={row['portfolio_winner']})")
+    return row
+
+
+def main(n_standard: int = 15, n_greedy: int = 1, publish: bool = True) -> list:
+    rows = []
+    for name, arch, shape in CELLS:
+        with tempfile.TemporaryDirectory() as store_dir:
+            rows.append(bench_cell(name, arch, shape, store_dir=store_dir,
+                                   n_standard=n_standard, n_greedy=n_greedy))
+    if publish:  # scaled-down (--quick / CI-gate) runs must not overwrite
+        emit(rows, "evolve_portfolio")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="scaled-down ensemble (7+1 trees)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless evolve reaches within "
+                         f"{EVOLVE_MCTS_RATIO}x of the MCTS cost on BOTH "
+                         "headline cells at equal eval budget "
+                         "(deterministic — no retry)")
+    args = ap.parse_args()
+    kw = dict(n_standard=7, publish=False) if args.quick else {}
+    rows = main(**kw)
+    for r in rows:
+        print(f"# {r['cell']}: evolve {r['evolve_vs_mcts']:.4f}x vs "
+              f"{MCTS_ALGO} at {r['eval_budget']} evals; portfolio "
+              f"{r['portfolio_vs_mcts']:.4f}x (winner "
+              f"{r['portfolio_winner']})")
+    if args.check:
+        bad = [
+            f"{r['cell']}: evolve {r['evolve_vs_mcts']:.4f}x > "
+            f"{EVOLVE_MCTS_RATIO}x the {MCTS_ALGO} cost"
+            for r in rows if r["evolve_vs_mcts"] > EVOLVE_MCTS_RATIO
+        ]
+        if bad:
+            print("# CHECK FAILED: " + "; ".join(bad))
+            sys.exit(1)
+        print(f"# check passed: evolve within {EVOLVE_MCTS_RATIO}x of "
+              f"{MCTS_ALGO} on both headline cells at equal eval budget")

@@ -50,7 +50,7 @@ def main() -> int:
 
     spec = load_spec(SPEC)
     # the real per-cell budget is 20 s; the gate shrinks it so the whole
-    # 24-row sweep stays CI-sized (the fleet path under test is identical)
+    # 32-row sweep stays CI-sized (the fleet path under test is identical)
     spec["defaults"]["budget_s"] = 0.2
 
     def inject(i: int, req: dict) -> None:

@@ -1,10 +1,14 @@
 """Top-level ProTuner API: ``autotune(arch, shape, algo, ...)``.
 
-Algorithms (paper §5 protocol):
+Algorithms (paper §5 protocol, plus the complete-plan portfolio):
   mcts_*    — ProTuner ensemble (15 standard + 1 greedy MCTS), Table-1 variants
   beam      — beam search, size 32, 5 passes (Adams et al. baseline)
   greedy    — beam size 1
   random    — random search (no cost model)
+  evolve    — evolutionary search over complete plans (core/evolve.py);
+              with a plan_store, seeded from the cell's recorded plans
+  portfolio — race evolve/mcts/beam/random on one shared transposition
+              cache and eval budget (core/evolve.py)
 
 ``measure=True`` adds real measurement (subprocess XLA compile) at every
 root synchronization — the ``mcts_cost+real_*`` configurations.
@@ -77,12 +81,17 @@ def make_mdp(
     mesh: str = "single",
     noise_sigma: float = 0.0,
     noise_seed: int = 0,
+    pricing: Optional[str] = None,
 ) -> ScheduleMDP:
+    """Build one cell's MDP.  ``pricing`` selects the analytic kernel:
+    None/"columnar" (exact, default), "scalar" (the exact oracle replay),
+    or "jit" (the jax-jitted kernel — JIT_RTOL tolerance contract and a
+    versioned pricing tag; see cost_model.py)."""
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     mspec = MULTI_POD if mesh == "multi" else SINGLE_POD
     space = ScheduleSpace(cfg, shape, mspec)
-    cm = AnalyticCostModel(cfg, shape, mspec)
+    cm = AnalyticCostModel(cfg, shape, mspec, pricing=pricing)
     if noise_sigma:
         cm = NoisyCostModel(cm, noise_sigma, noise_seed)
     return ScheduleMDP(space, cm)
@@ -114,6 +123,7 @@ def autotune(
     n_workers: Optional[int] = None,
     worker_pool=None,
     plan_store=None,
+    pricing: Optional[str] = None,
 ) -> TuneResult:
     """Tune one (arch × shape × mesh) cell.
 
@@ -162,11 +172,21 @@ def autotune(
             arch, shape_name, mesh=mesh, algo=algo, seed=seed,
             time_budget_s=time_budget_s, n_standard=n_standard,
             n_greedy=n_greedy, noise_sigma=noise_sigma, cost=cost,
+            pricing=pricing,
         )
         hit = plan_store.lookup(store_req)
         if hit is not None:
             return hit
-    mdp = mdp or make_mdp(arch, shape_name, mesh, noise_sigma, seed)
+    seed_plans = None
+    if plan_store is not None and algo in ("evolve", "portfolio"):
+        # warm-start the evolutionary population from the store's recorded
+        # plans for this cell (any algo/seed — a good plan is a good seed);
+        # non-evolutionary backends ignore seed_plans
+        seed_plans = plan_store.seed_plans(
+            arch=arch, shape=shape_name, mesh=mesh
+        )
+    mdp = mdp or make_mdp(arch, shape_name, mesh, noise_sigma, seed,
+                          pricing=pricing)
     backend: SearchBackend = resolve_backend(algo, engine=engine)
     res = backend.run(
         mdp,
@@ -182,6 +202,7 @@ def autotune(
         cost=cost,
         n_workers=n_workers,
         worker_pool=worker_pool,
+        seed_plans=seed_plans,
     )
     if plan_store is not None:
         plan_store.record(store_req, res)

@@ -103,6 +103,69 @@ _GRAD_SCALE_AR = np.array([2.0, 0.25, 1.0])
 _SBYTES_F32 = BF16 + 2 * 4 + 4
 _SBYTES_INT8 = BF16 + 2 * 1.1 + 4
 
+# ---------------------------------------------------------------------------
+# The jitted pricing path (``pricing="jit"``).
+#
+# ``_terms_jitted`` runs the SAME roofline arithmetic as ``_terms_columnar``
+# as one jax-jitted elementwise program over padded columns (pow-2 padding,
+# the ``LearnedCostModel.cost_batch`` idiom, so the XLA compile cache stays
+# bounded).  The kernel traces and executes under ``enable_x64`` so every
+# elementwise op is the same float64 operation the numpy kernel performs —
+# empirically bit-identical on this XLA CPU build, but XLA is free to
+# contract multiplies and adds, so the CONTRACT is relative agreement
+# within ``JIT_RTOL``, not bit-equality (pinned by the jit-parity
+# hypothesis property).  Because the contract is a tolerance, the jitted
+# path carries a versioned ``pricing_tag`` distinct from the exact paths:
+# transposition-cache snapshots and plan-store requests priced under
+# different tags never mix (store.py keys on the tag).
+# ---------------------------------------------------------------------------
+JIT_PRICING_TAG = "analytic-jit-v1"
+JIT_RTOL = 1e-9  # |jit - columnar| <= JIT_RTOL * columnar, elementwise
+# Unique-batch size at/above which pricing="jit" uses the jitted kernel
+# (below it: the certified scalar replay, exactly like columnar_min_batch).
+# The columnar kernel's crossover vs scalar replay sits at 16; the jitted
+# kernel's measured crossover on the decode headline cell sits between 4
+# and 8 (jax dispatch is ~120µs flat on CPU, the warm scalar walk ~30µs
+# per plan, so batch 1 stays scalar), pinned here and re-measured by
+# benchmarks/engine_throughput.py's ``kernel_jit`` microbench legs.
+JIT_MIN_BATCH = 8
+
+_JAX_MODS = None
+
+
+def _jax_mods():
+    """Lazy jax import: the forkserver preload chain (repro.core.ensemble →
+    this module) must stay jax-free (asserted by tests/test_engine.py), so
+    jax loads only when a pricing="jit" model actually prices a batch."""
+    global _JAX_MODS
+    if _JAX_MODS is None:
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        _JAX_MODS = (jax, jnp, enable_x64)
+    return _JAX_MODS
+
+
+def _pad_pow2(n: int) -> int:
+    """Next power of two >= n (>= 1) — bounds the jit compile cache to
+    O(log max_batch) specializations, same as learned_cost._pad_len."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def _pad_edge(a: np.ndarray, pad: int) -> np.ndarray:
+    """Pad a column to ``pad`` rows by repeating the last row — padded lanes
+    compute a valid plan's terms (no div-by-zero garbage) and are sliced
+    off.  Hand-rolled: np.pad costs ~20µs per column, which at 22 columns
+    per batch would eat the kernel's whole win."""
+    n = len(a)
+    if n == pad:
+        return a
+    out = np.empty(pad, dtype=a.dtype)
+    out[:n] = a
+    out[n:] = a[n - 1]
+    return out
+
 
 class PlanColumns:
     """Structure-of-arrays encoding of a ``SchedulePlan`` batch.
@@ -376,38 +439,69 @@ class AnalyticCostModel:
         mesh: MeshSpec,
         hw: HardwareSpec = HW,
         columnar: bool = True,
-        columnar_min_batch: int = 16,
+        columnar_min_batch: Optional[int] = None,
+        pricing: Optional[str] = None,
     ):
         self.cfg = cfg
         self.shape = shape
         self.mesh = mesh
         self.hw = hw
-        # columnar=True (default): batch pricing runs through the one
-        # vectorized kernel (_terms_columnar).  columnar=False keeps the
-        # pre-columnar protocol end to end (fresh-context scalar terms(),
-        # per-unique-plan replay in cost_batch) — the oracle the kernel is
-        # certified bit-identical against, and the baseline leg of
-        # benchmarks/engine_throughput.py.
-        self.columnar = columnar
+        # pricing selects the batch kernel behind the one dispatch:
+        #   "scalar"   — the pre-columnar protocol end to end (fresh-context
+        #                scalar terms(), per-unique-plan replay in
+        #                cost_batch): the oracle the kernels are certified
+        #                against, and the baseline benchmark leg;
+        #   "columnar" — (default) the vectorized numpy kernel
+        #                (_terms_columnar), bit-identical to scalar;
+        #   "jit"      — the jax-jitted kernel (_terms_jitted) over padded
+        #                columns: same arithmetic, agreement within
+        #                JIT_RTOL (a distinct versioned pricing_tag, so
+        #                cached values never mix with the exact paths).
+        # The legacy columnar=False spelling maps to pricing="scalar".
+        if pricing is None:
+            pricing = "columnar" if columnar else "scalar"
+        if pricing not in ("scalar", "columnar", "jit"):
+            raise ValueError(f"unknown pricing path: {pricing!r}")
+        self.pricing = pricing
+        self.columnar = pricing != "scalar"
         # Unique-plan count below which a columnar batch dispatches to the
         # scalar replay instead of the kernel: numpy column dispatch costs
         # ~2us/op regardless of width (plus ~25 fresh temp buffers per
         # call, which interleaved engine workloads feel harder than tight
         # microbenchmarks do), so small batches — greedy rollout sweeps,
         # single leaves, half-warm lockstep rounds — price faster as
-        # scalar walks.  The two paths are certified bit-identical, so
-        # the threshold is a pure performance knob — results cannot
-        # depend on it.  Set to 1 to force every batch through the kernel
-        # (the differential tests do).
+        # scalar walks.  The columnar/scalar paths are certified
+        # bit-identical, so there the threshold is a pure performance knob
+        # — results cannot depend on it.  Under pricing="jit" the same
+        # knob defaults to JIT_MIN_BATCH (the jitted kernel's measured
+        # crossover; 1 means every batch, even single leaves, prices
+        # through the kernel) and batches below it use the EXACT scalar
+        # replay — so there the threshold does select between tagged
+        # pricing paths.  Set to 1 to force every batch through the
+        # kernel (the differential tests do).
+        if columnar_min_batch is None:
+            columnar_min_batch = JIT_MIN_BATCH if pricing == "jit" else 16
         self.columnar_min_batch = columnar_min_batch
         self.n_evals = 0
         self._batch_ctx: Optional[_EvalContext] = None
+        self._jit_fn = None  # built (and jax imported) on first jit pricing
+
+    @property
+    def pricing_tag(self) -> str:
+        """Version tag of the value-producing pricing path: "exact" for the
+        bit-identical scalar/columnar pair, JIT_PRICING_TAG for the
+        tolerance-contract jitted kernel.  Store/cache keys include the
+        tag whenever it is not "exact" so values from different contracts
+        never mix (see service/store.py)."""
+        return JIT_PRICING_TAG if self.pricing == "jit" else "exact"
 
     def __getstate__(self):
         # the batch context holds derived caches only — drop it so pickled
-        # models (process-pool workers) stay lean; it lazily rebuilds
+        # models (process-pool workers) stay lean; it lazily rebuilds.
+        # the jitted kernel closure is unpicklable and rebuilds the same way
         d = self.__dict__.copy()
         d["_batch_ctx"] = None
+        d["_jit_fn"] = None
         return d
 
     # ------------------------------------------------------------------
@@ -1036,18 +1130,91 @@ class AnalyticCostModel:
         )
 
     # ------------------------------------------------------------------
+    # The jitted kernel (pricing="jit")
+    # ------------------------------------------------------------------
+    def _step_batch(self, cols: PlanColumns) -> np.ndarray:
+        """``step_s`` for an encoded batch through the selected kernel —
+        the one dispatch ``cost``/``cost_batch``/``cost_columns`` share, so
+        the scalar and batched signals cannot drift within a pricing
+        path."""
+        if self.pricing == "jit":
+            return self._terms_jitted(cols, self._ctx())
+        return self._terms_columnar(cols, self._ctx())["step_s"]
+
+    def _terms_jitted(self, cols: PlanColumns, ctx: _EvalContext) -> np.ndarray:
+        """``step_s`` for a whole encoded batch via the jax-jitted kernel.
+
+        The discrete, plan-keyed lookups the columnar kernel resolves
+        through ``_EvalContext`` (VMEM spill per flash-block pair,
+        activation multipliers per TP degree, KV totals per dtype) are
+        gathered host-side into plain numeric columns; everything else is
+        one jitted elementwise float64 program over columns padded to the
+        next power of two (bounded compile cache) and sliced back to
+        ``n``.  Agreement with ``_terms_columnar``: within ``JIT_RTOL``
+        (see module notes on the tolerance contract and pricing tag)."""
+        jax, _, enable_x64 = _jax_mods()
+        fn = self._jit_fn
+        if fn is None:
+            fn = self._jit_fn = _build_jit_kernel(self, ctx)
+        inp = self._jit_inputs(cols, ctx, _pad_pow2(cols.n))
+        with enable_x64():
+            out = fn(**inp)
+        return np.asarray(out)[: cols.n]
+
+    def _jit_inputs(
+        self, cols: PlanColumns, ctx: _EvalContext, pad: int
+    ) -> Dict[str, np.ndarray]:
+        """Host-side gather + pad: the same per-discrete-key context
+        lookups ``_terms_columnar`` performs, emitted as numeric columns
+        the jitted program can consume."""
+        cfg, shape = self.cfg, self.shape
+        n = cols.n
+        # VMEM spill per distinct (bq, bkv) pair — same gather as columnar
+        spill = np.zeros(n, dtype=bool)
+        if cfg.n_heads:
+            for q, k in set(zip(cols.bq.tolist(), cols.bkv.tolist())):
+                spill[(cols.bq == q) & (cols.bkv == k)] = ctx.vmem_spills(q, k)
+        # stored-activation multipliers per distinct TP degree (train only)
+        fm = np.zeros(n)
+        mm = np.zeros(n)
+        if shape.kind == "train":
+            tp = np.where(cols.tp_on, self.mesh.axis("model"), 1)
+            for v in set(tp.tolist()):
+                f_mult, m_mult = ctx.act_mults(int(v))
+                fm[tp == v] = f_mult
+                mm[tp == v] = m_mult
+        # whole-model KV bytes per dtype, before the n_periods multiply
+        kvt = np.zeros(n)
+        if shape.kind == "decode":
+            if bool(cols.kv_int8.any()):
+                kvt[cols.kv_int8] = ctx.kv_total(1.06)
+            if not bool(cols.kv_int8.all()):
+                kvt[~cols.kv_int8] = ctx.kv_total(BF16)
+        inp = {
+            "pod_data": cols.pod_data, "tp_on": cols.tp_on,
+            "fsdp_on": cols.fsdp_on, "tp2d": cols.tp2d,
+            "mixer_tp": cols.mixer_tp, "seq_shard": cols.seq_shard,
+            "ffn_tp": cols.ffn_tp, "moe_ep": cols.moe_ep,
+            "moe_tp": cols.moe_tp, "vocab_shard": cols.vocab_shard,
+            "opt_int8": cols.opt_int8, "remat": cols.remat,
+            "grad_comm": cols.grad_comm, "microbatches": cols.microbatches,
+            "bq": cols.bq, "bkv": cols.bkv, "scan_chunk": cols.scan_chunk,
+            "overlap": cols.overlap, "spill": spill, "fm": fm, "mm": mm,
+            "kvt": kvt,
+        }
+        return {k: _pad_edge(v, pad) for k, v in inp.items()}
+
+    # ------------------------------------------------------------------
     def cost(self, plan: SchedulePlan) -> float:
         """Scalar cost (estimated step seconds, with infeasibility penalty).
-        Columnar mode routes through the same dispatch as ``cost_batch``
-        (a batch of one), so the scalar and batched signals cannot
-        drift."""
+        Columnar/jit modes route through the same dispatch as
+        ``cost_batch`` (a batch of one), so the scalar and batched signals
+        cannot drift."""
         if self.columnar:
             self.n_evals += 1
             if self.columnar_min_batch <= 1:
                 cols = PlanColumns.from_plans([plan])
-                return float(
-                    self._terms_columnar(cols, self._ctx())["step_s"][0]
-                )
+                return float(self._step_batch(cols)[0])
             return self._terms_scalar(plan, self._ctx()).step_s
         return self.terms(plan).step_s
 
@@ -1108,8 +1275,7 @@ class AnalyticCostModel:
         if cols.n < self.columnar_min_batch:
             ctx = self._ctx()
             return [self._terms_scalar(p, ctx).step_s for p in cols.plans]
-        step = self._terms_columnar(cols, self._ctx())["step_s"]
-        return [float(v) for v in step]
+        return [float(v) for v in self._step_batch(cols)]
 
     def partial_cost(self, actions, space: ScheduleSpace) -> float:
         """The (unreliable) cost of an INCOMPLETE schedule: complete the
@@ -1119,3 +1285,190 @@ class AnalyticCostModel:
         defaults = space.default_actions()
         full = list(actions) + defaults[len(actions):]
         return self.cost(space.plan_from_actions(full))
+
+
+def _build_jit_kernel(model: AnalyticCostModel, ctx: _EvalContext):
+    """Compile-ready jitted ``step_s`` kernel for one (cfg, shape, mesh, hw)
+    cell.
+
+    Every cell-constant quantity — structural FLOP/param accounting, mesh
+    axes, hardware numbers, kind flags — is resolved here (through the same
+    ``_EvalContext`` the columnar kernel uses) and closed over as Python
+    scalars, so the traced program is pure elementwise column math: the
+    ``_terms_columnar`` arithmetic, operation for operation, on float64
+    (traced and executed under ``enable_x64``).  Only ``step_s`` is
+    computed — the jitted path prices searches; full term breakdowns stay
+    on the exact kernels."""
+    jax, jnp, enable_x64 = _jax_mods()
+    cfg, shape, hw, mesh = model.cfg, model.shape, model.hw, model.mesh
+    train = shape.kind == "train"
+    decode = shape.kind == "decode"
+    chips = mesh.size
+    gbm = max(shape.global_batch, 1)
+    mesh_data = mesh.axis("data")
+    mesh_model = mesh.axis("model")
+    multi_pod = mesh.multi_pod
+    mesh_pod = mesh.axis("pod") if multi_pod else 1
+    fwd = ctx.fwd_flops()
+    param_count = ctx.param_count()
+    g = dict(ctx.param_groups())
+    n_attn, n_mamba, n_dense, n_moe = ctx.layer_counts()
+    n_periods = ctx.n_periods()
+    vs_ok = cfg.vocab_size % mesh_model == 0
+    n_kv_heads = max(cfg.n_kv_heads, 1)
+    has_heads = bool(cfg.n_heads)
+    is_ssm, is_moe = cfg.is_ssm, cfg.is_moe
+    tokens = shape.tokens
+    d_model, d_inner = cfg.d_model, cfg.d_inner
+    n_layers, vocab_size = cfg.n_layers, cfg.vocab_size
+    n_experts, ept = cfg.n_experts, cfg.experts_per_token
+    k_tile = (512.0 / 576.0) ** 2
+    remat_mult = tuple(float(x) for x in _REMAT_MULT)
+    gs_zero3 = tuple(float(x) for x in _GRAD_SCALE_ZERO3)
+    gs_ar = tuple(float(x) for x in _GRAD_SCALE_AR)
+
+    def kernel(pod_data, tp_on, fsdp_on, tp2d, mixer_tp, seq_shard, ffn_tp,
+               moe_ep, moe_tp, vocab_shard, opt_int8, remat, grad_comm,
+               microbatches, bq, bkv, scan_chunk, overlap, spill, fm, mm,
+               kvt):
+        # ---- mesh sizes (ints, exact in float64) ----
+        dp = jnp.full(remat.shape, mesh_data, dtype=remat.dtype)
+        if multi_pod:
+            dp = jnp.where(pod_data, dp * mesh_pod, dp)
+        tp = jnp.where(tp_on, mesh_model, 1)
+        fsdp = jnp.where(fsdp_on, dp, 1)
+        n_mb = jnp.maximum(microbatches, 1)
+        dp_eff = jnp.minimum(dp, gbm)
+
+        # ---- compute ----
+        if train:
+            flops = fwd * jnp.asarray(remat_mult)[remat] + 10.0 * param_count
+        else:
+            flops = jnp.full(remat.shape, float(fwd))
+        eff = (bq / (bq + 64.0)) * (bkv / (bkv + 64.0)) / k_tile
+        eff = jnp.minimum(eff, 1.0)
+        if has_heads:
+            eff = jnp.where(spill, eff * 0.5, eff)
+        mb_eff = jnp.where(n_mb > 1, 1.0 - 0.015 * jnp.log2(n_mb), 1.0)
+        tax = jnp.where(overlap >= 0.9, 1.05, 1.0)
+        compute_s = flops / (chips * hw.peak_flops) / (eff * mb_eff) * tax
+        if is_ssm:
+            grid_steps = (
+                tokens / jnp.maximum(dp, 1) / scan_chunk * (d_inner / 256.0)
+            )
+            compute_s = compute_s + grid_steps * 0.3e-6 / jnp.maximum(
+                chips / dp, 1
+            )
+
+        # ---- sharded parameter bytes ----
+        tp_gt1 = tp > 1
+        tot = g["mixer"] / jnp.where(mixer_tp & tp_gt1, tp, 1)
+        tot = tot + g["ffn"] / jnp.where(ffn_tp & tp_gt1, tp, 1)
+        if g["moe"]:
+            moe_div = jnp.where(
+                moe_ep & tp_gt1, jnp.minimum(tp, n_experts),
+                jnp.where(moe_tp & tp_gt1, tp, 1),
+            )
+            tot = tot + g["moe"] / moe_div
+        vs_mask = (vocab_shard & tp_gt1) if vs_ok else jnp.zeros_like(tp_gt1)
+        tot = tot + g["vocab"] / jnp.where(vs_mask, tp, 1)
+        tot = tot + g["other"]
+        p_tp = tot * BF16
+
+        # ---- memory (HBM traffic, accounted per chip) ----
+        weight_reads = p_tp * n_mb * (2 if train else 1)
+        ppc = p_tp / BF16 / fsdp
+        if train:
+            sbytes = jnp.where(opt_int8, _SBYTES_INT8, _SBYTES_F32)
+            opt_traffic = ppc * (2 * sbytes + 4)
+        else:
+            opt_traffic = 0.0
+        tl = tokens / dp_eff
+        act_traffic = tl * d_model * BF16 * n_layers * (6 if train else 3)
+        if train:
+            act_traffic = jnp.where(remat != 0, act_traffic * 1.35, act_traffic)
+        if decode:
+            kvt_full = kvt * n_periods
+            shard = dp_eff
+            seq_mult = (dp // dp_eff) * jnp.where(~mixer_tp, tp, 1)
+            shard = jnp.where(seq_shard, shard * seq_mult, shard)
+            kv_heads = jnp.minimum(tp, n_kv_heads)
+            shard = jnp.where(mixer_tp & tp_on, shard * kv_heads, shard)
+            kv_col = kvt_full / shard
+        else:
+            kv_col = 0.0
+        per_chip_traffic = weight_reads + opt_traffic + act_traffic + kv_col
+        memory_s = per_chip_traffic / hw.hbm_bw
+
+        # ---- collectives ----
+        if train:
+            shard_bytes = p_tp / fsdp
+            ag = shard_bytes * (fsdp - 1)
+            rs = ag * jnp.asarray(gs_zero3)[grad_comm]
+            zero3 = (2 * ag + rs) * n_mb
+            grad_ar = 2 * p_tp * (dp - 1) / dp * jnp.asarray(gs_ar)[grad_comm]
+            param_part = jnp.where(fsdp > 1, zero3, grad_ar)
+            pod_part = param_part
+        else:
+            wg_mask = tp2d & (fsdp > 1)
+            wg = p_tp / fsdp * (fsdp - 1)
+            param_part = jnp.where(wg_mask, wg, 0.0)
+            pod_part = jnp.zeros_like(param_part)
+        act = tl * d_model * BF16
+        n_ar = (
+            jnp.where(mixer_tp, n_attn + n_mamba, 0)
+            + jnp.where(ffn_tp, n_dense, 0)
+            + jnp.where(moe_tp, n_moe, 0)
+        ) * n_periods
+        wire_one = 2 * act * (tp - 1) / tp
+        wire_one = jnp.where(seq_shard, wire_one * 0.5, wire_one)
+        tp_act = n_ar * wire_one
+        if train:
+            tp_act = tp_act * 3
+        tp_act = jnp.where(tp_gt1, tp_act, 0.0)
+        vocab_part = 2 * act * (tp - 1) / tp * (3 if train else 1)
+        vocab_part = jnp.where(tp_gt1 & vocab_shard, vocab_part, 0.0)
+        coll = param_part + tp_act + vocab_part
+        if is_moe:
+            ep = jnp.minimum(tp, n_experts)
+            a2a = tl * ept * 1.25 * d_model * BF16
+            moe_part = 2 * a2a * (ep - 1) / ep * (3 if train else 1)
+            coll = coll + jnp.where(moe_ep & tp_gt1, moe_part, 0.0)
+        if multi_pod:
+            denom = jnp.maximum(coll, 1e-9)
+            link_eff = (
+                (coll - pod_part) / denom * hw.link_bw
+                + pod_part / denom * hw.pod_link_bw
+            )
+            link = jnp.where(
+                pod_data, jnp.maximum(link_eff, hw.pod_link_bw), hw.link_bw
+            )
+        else:
+            link = hw.link_bw
+        collective_s = coll / link
+
+        # ---- capacity ----
+        resident = ppc * (sbytes if train else BF16)
+        if train:
+            tl2 = tokens / dp / n_mb
+            stored_mult = jnp.where(
+                remat == 2, float(d_model),
+                jnp.where(remat == 1, d_model * 4 + mm * 0.5 + fm * 0.5,
+                          d_model * 6 + mm + fm),
+            )
+            stored = tl2 * stored_mult * n_periods
+            logits = tl2 * vocab_size / jnp.where(vocab_shard, tp, 1)
+            logits = jnp.where(remat == 0, logits, 0.0)
+            act_res = stored * BF16 + logits * BF16
+        else:
+            act_res = 0.0
+        per_chip = resident + act_res + kv_col
+        feasible = per_chip <= hw.hbm_bytes * 0.92
+
+        step_s = jnp.maximum(compute_s, memory_s) + (1.0 - overlap) * collective_s
+        return jnp.where(
+            feasible, step_s,
+            step_s * (100.0 * (1.0 + per_chip / hw.hbm_bytes)),
+        )
+
+    return jax.jit(kernel)

@@ -75,10 +75,11 @@ def resolve_backend(
     ``cost`` configures MCTS backends' learned-cost serving mode; the
     non-model-based baselines (beam/greedy/random) ignore it — they price
     straight through the analytic model, as in the paper."""
-    # imported here: beam/random/ensemble all define backends and import
-    # TuneResult from ensemble, which imports this package
+    # imported here: beam/random/evolve/ensemble all define backends and
+    # import TuneResult from ensemble, which imports this package
     from repro.core.beam import BeamBackend, GreedyBackend
     from repro.core.ensemble import MCTSEnsembleBackend
+    from repro.core.evolve import EvolutionarySearchBackend, PortfolioBackend
     from repro.core.random_search import RandomBackend
 
     if algo == "beam":
@@ -87,6 +88,12 @@ def resolve_backend(
         return GreedyBackend()
     if algo == "random":
         return RandomBackend()
+    if algo == "evolve":
+        return EvolutionarySearchBackend()
+    if algo == "portfolio":
+        # member mcts/beam runs inherit the engine/cost selection through
+        # the portfolio's run() opts
+        return PortfolioBackend()
     if algo in TABLE1 or algo == "mcts":
         return MCTSEnsembleBackend(
             algo=algo,

@@ -33,6 +33,16 @@ def main(argv=None) -> int:
                     help="cost serving mode: analytic (exact), learned "
                          "(online-trained MLP prices cache misses), hybrid "
                          "(learned only while confident; analytic fallback)")
+    ap.add_argument("--pricing", default=None,
+                    choices=["scalar", "columnar", "jit"],
+                    help="analytic pricing kernel: columnar (exact, "
+                         "default), scalar (exact oracle replay), jit "
+                         "(jax-jitted — ULP-level drift, versioned tag; "
+                         "see cost_model.py)")
+    ap.add_argument("--store", default=None,
+                    help="PlanStore root directory: answer repeats from "
+                         "disk, record this run, and (evolve/portfolio) "
+                         "seed the population from stored plans")
     ap.add_argument("--parallel", action="store_true",
                     help="run ensemble trees on persistent pinned worker "
                          "processes (per-round deltas both directions; "
@@ -46,6 +56,11 @@ def main(argv=None) -> int:
     from repro.core.autotuner import autotune, make_mdp
     from repro.core.measure import make_measure_fn
 
+    plan_store = None
+    if args.store:
+        from repro.service.store import PlanStore
+
+        plan_store = PlanStore(args.store)
     measure_fn = measure_backend = fleet = None
     if args.measure and args.measure_workers:
         from repro.core.measure_fleet import MeasurementFleet
@@ -68,6 +83,8 @@ def main(argv=None) -> int:
             parallel=args.parallel,
             cost=args.cost,
             n_workers=args.workers,
+            pricing=args.pricing,
+            plan_store=plan_store,
         )
     finally:
         if fleet is not None:

@@ -138,9 +138,12 @@ class TunerService:
             if n:
                 self.log(f"[tuner-service] cell {ckey[:8]}: warmed "
                          f"{n} entries from store")
+        # a "pricing" entry in the canonical request is the versioned jit
+        # kernel tag (store.canonical_request); absent means exact
         mdp = CachedMDP(make_mdp(
             req["arch"], req["shape"], req["mesh"],
             req["noise_sigma"], req["noise_seed"],
+            pricing="jit" if req.get("pricing") else None,
         ), cache=cell.cache)
         fleet = self._shared_fleet()
         measure_backend = (

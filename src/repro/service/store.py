@@ -65,6 +65,7 @@ def canonical_request(
     noise_sigma: float = 0.0,
     noise_seed: Optional[int] = None,
     cost: str = "analytic",
+    pricing: Optional[str] = None,
     **_ignored,
 ) -> dict:
     """Normalize a tuning request to the value-affecting settings only.
@@ -72,9 +73,14 @@ def canonical_request(
     ``make_mdp(..., noise_sigma, seed)`` default — and normalizes to 0
     when ``noise_sigma`` is 0 (no noise → the seed is value-inert, and
     every noise-free run of a cell should share one cell file).
-    Execution knobs (engine/parallel/n_workers) are accepted and
-    dropped."""
-    return {
+    ``pricing`` normalizes to the versioned kernel tag: None/"scalar"/
+    "columnar" are all the exact analytic value and collapse to "exact" —
+    OMITTED from the dict so every pre-existing request key is unchanged
+    — while "jit" records ``cost_model.JIT_PRICING_TAG`` (a tag bump on
+    any kernel revision re-keys stored plans and cells, so ULP-level
+    value drift never answers a stale request).  Execution knobs
+    (engine/parallel/n_workers) are accepted and dropped."""
+    req = {
         "arch": arch,
         "shape": shape,
         "mesh": mesh,
@@ -89,6 +95,13 @@ def canonical_request(
         ),
         "cost": cost,
     }
+    if pricing == "jit":
+        from repro.core.cost_model import JIT_PRICING_TAG
+
+        req["pricing"] = JIT_PRICING_TAG
+    elif pricing not in (None, "scalar", "columnar"):
+        raise ValueError(f"unknown pricing {pricing!r}")
+    return req
 
 
 def request_key(req: dict) -> str:
@@ -98,12 +111,15 @@ def request_key(req: dict) -> str:
 
 def cell_key(req: dict) -> str:
     """Cache-value identity: every request whose cache entries are
-    interchangeable (same cost function) maps to one cell file."""
-    blob = json.dumps(
-        [STORE_VERSION, req["arch"], req["shape"], req["mesh"],
-         req["noise_sigma"], req["noise_seed"]],
-        sort_keys=True,
-    )
+    interchangeable (same cost function) maps to one cell file.  A
+    non-exact pricing tag (jit kernel, ULP-level drift from the exact
+    path) is part of that identity — appended only when present, so all
+    exact-path cell keys are unchanged."""
+    fields = [STORE_VERSION, req["arch"], req["shape"], req["mesh"],
+              req["noise_sigma"], req["noise_seed"]]
+    if req.get("pricing"):
+        fields.append(req["pricing"])
+    blob = json.dumps(fields, sort_keys=True)
     return hashlib.sha1(blob.encode()).hexdigest()[:20]
 
 
@@ -199,6 +215,45 @@ class PlanStore:
             return None
         self.hits += 1
         return _result_from_dict(obj["result"])
+
+    def seed_plans(
+        self,
+        arch: Optional[str] = None,
+        shape: Optional[str] = None,
+        mesh: Optional[str] = None,
+        limit: int = 16,
+    ):
+        """Every stored plan matching the cell filters, decoded — the
+        evolutionary backend's warm-start population (any algo/seed/budget
+        qualifies: a good plan for the cell is a good seed regardless of
+        which searcher found it).  Files are scanned in sorted filename
+        order through the validating loader, so the result is
+        deterministic for a given store state and corrupt entries are
+        quarantined rather than crashing the seeding pass."""
+        out = []
+        for fname in sorted(os.listdir(self.plans_dir)):
+            if not fname.endswith(".json"):
+                continue
+            obj = _load_json(
+                os.path.join(self.plans_dir, fname),
+                lambda o: all(k in o["result"] for k in _REQUIRED_RESULT),
+            )
+            if obj is None:
+                continue
+            req = obj.get("request") or {}
+            if arch is not None and req.get("arch") != arch:
+                continue
+            if shape is not None and req.get("shape") != shape:
+                continue
+            if mesh is not None and req.get("mesh") != mesh:
+                continue
+            try:
+                out.append(SchedulePlan.from_dict(obj["result"]["plan"]))
+            except (KeyError, TypeError, ValueError):
+                continue
+            if len(out) >= limit:
+                break
+        return out
 
     def record(self, req: dict, res: TuneResult) -> None:
         if res.plan is None:

@@ -35,21 +35,14 @@ the grid's hundreds of trajectories, keeping the harness inside the
 tier-1 budget.
 """
 import pytest
+from conftest import TABLE1_CELLS as CELLS
+from conftest import make_cell_mdp
 
-from repro.configs import get_config, get_shape
 from repro.core.autotuner import autotune
-from repro.core.cost_model import AnalyticCostModel
 from repro.core.engine import ArrayMCTS, CachedMDP
 from repro.core.engine.batch import run_decision_batch
 from repro.core.ensemble import ProTuner
 from repro.core.mcts import MCTS, MCTSConfig
-from repro.core.mdp import ScheduleMDP
-from repro.core.space import SINGLE_POD, ScheduleSpace
-
-CELLS = {
-    "moe_train": ("granite-moe-1b-a400m", "train_4k"),
-    "decode": ("granite-3-2b", "decode_32k"),
-}
 
 _SHARED = {}
 
@@ -64,16 +57,10 @@ def _mdp(cell: str, pricing: str = "columnar") -> CachedMDP:
     key = (cell, pricing)
     if key not in _SHARED:
         arch, shape_name = CELLS[cell]
-        cfg = get_config(arch).reduced()
-        shape = get_shape(shape_name)
-        space = ScheduleSpace(cfg, shape, SINGLE_POD)
-        if pricing == "columnar":
-            cm = AnalyticCostModel(
-                cfg, shape, SINGLE_POD, columnar=True, columnar_min_batch=1
-            )
-        else:
-            cm = AnalyticCostModel(cfg, shape, SINGLE_POD, columnar=False)
-        _SHARED[key] = CachedMDP(ScheduleMDP(space, cm))
+        min_batch = 1 if pricing == "columnar" else None
+        _SHARED[key] = CachedMDP(make_cell_mdp(
+            arch, shape_name, pricing=pricing, columnar_min_batch=min_batch
+        ))
     return _SHARED[key]
 
 
@@ -239,3 +226,103 @@ def test_array_engine_is_the_default():
     res2, _ = run_algo("granite-moe-1b-a400m", "train_4k", "mcts_1s", seed=0,
                        n_standard=2, n_greedy=1)
     assert res2.engine == "array"
+
+
+# ---------------------------------------------------------------------------
+# Evolutionary + portfolio legs: fixed seed × both cells × exact analytic
+# cost.  These pin (a) run-to-run determinism on fresh caches, (b) the
+# eval-budget accounting contract — generation pricing hits the cost model
+# exactly ONCE per unique plan, i.e. ``n_evals == cache.misses`` — and
+# (c) that the portfolio's reported winner is the best member's result
+# bit-for-bit.
+# ---------------------------------------------------------------------------
+def _fresh_cached(cell: str) -> CachedMDP:
+    arch, shape_name = CELLS[cell]
+    return CachedMDP(make_cell_mdp(arch, shape_name))
+
+
+def _strip_wall(decisions):
+    return [{k: v for k, v in d.items() if k != "wall_time_s"}
+            for d in decisions]
+
+
+@pytest.mark.parametrize("cell", list(CELLS))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_evolve_deterministic_with_exact_eval_accounting(cell, seed):
+    from repro.core.evolve import EvolutionarySearchBackend
+
+    def run(mdp):
+        return EvolutionarySearchBackend(population=16, generations=8).run(
+            mdp, seed=seed
+        )
+
+    mdp_a, mdp_b = _fresh_cached(cell), _fresh_cached(cell)
+    a, b = run(mdp_a), run(mdp_b)
+    # run-to-run determinism on fresh caches: bit-identical everything
+    assert a.plan == b.plan and a.cost == b.cost
+    assert a.n_evals == b.n_evals and a.decisions == b.decisions
+    # eval-budget accounting: each unique plan priced exactly once for the
+    # whole run — the shared cache's misses ARE the model evals (revisits
+    # are hits, and the final best-plan re-read is a hit too)
+    assert a.n_evals == mdp_a.cache.misses == a.cache_misses
+    assert a.cache_hits == mdp_a.cache.hits > 0
+    # warm rerun over the SAME cache: zero new pricings, identical result
+    # values (the cache is a pure memo — only eval counts change)
+    c = run(mdp_a)
+    assert c.plan == a.plan and c.cost == a.cost
+    assert c.n_evals == a.n_evals  # no new evals: everything was cached
+
+
+@pytest.mark.parametrize("cell", list(CELLS))
+def test_portfolio_winner_is_best_member_bit_for_bit(cell):
+    from repro.core.evolve import PortfolioBackend
+
+    def run():
+        mdp = _fresh_cached(cell)
+        return PortfolioBackend().run(
+            mdp, seed=0, n_standard=2, n_greedy=1
+        ), mdp
+
+    res, mdp = run()
+    assert res.algo == "portfolio"
+    assert [d["member"] for d in res.decisions] == [
+        "evolve", "mcts_1s", "beam", "random"]
+    winners = [d for d in res.decisions if d["winner"]]
+    assert len(winners) == 1
+    # the reported winner IS the best member's result, unmodified
+    assert winners[0]["plan"] == res.plan.to_dict()
+    assert winners[0]["cost"] == res.cost
+    assert res.cost == min(d["cost"] for d in res.decisions)
+    # unique-plan accounting across ALL members through the one shared cache
+    assert res.n_evals == mdp.cache.misses == res.cache_misses
+    # run-to-run determinism (wall times aside)
+    res2, _ = run()
+    assert res2.plan == res.plan and res2.cost == res.cost
+    assert res2.n_evals == res.n_evals
+    assert _strip_wall(res2.decisions) == _strip_wall(res.decisions)
+
+
+def test_portfolio_shared_budget_skips_members_once_spent():
+    from repro.core.evolve import PortfolioBackend
+
+    mdp = _fresh_cached("decode")
+    res = PortfolioBackend().run(
+        mdp, seed=0, max_evals=40, n_standard=2, n_greedy=1
+    )
+    ran = [d["member"] for d in res.decisions]
+    # evolve's first generations spend the budget; later members are
+    # skipped entirely (not run with a zero budget)
+    assert ran[0] == "evolve" and len(ran) < 4
+    assert res.cost == min(d["cost"] for d in res.decisions)
+
+
+@pytest.mark.parametrize("cell", list(CELLS))
+def test_autotune_routes_evolve_and_portfolio(cell):
+    arch, shape_name = CELLS[cell]
+    r1 = autotune(arch, shape_name, algo="evolve", seed=0)
+    r2 = autotune(arch, shape_name, algo="evolve", seed=0)
+    assert r1.algo == "evolve" and r1.plan == r2.plan and r1.cost == r2.cost
+    rp = autotune(arch, shape_name, algo="portfolio", seed=0,
+                  n_standard=2, n_greedy=1)
+    assert rp.algo == "portfolio"
+    assert rp.cost <= r1.cost  # the portfolio contains an evolve member

@@ -10,14 +10,13 @@ import random
 
 import pytest
 
-from repro.configs import get_config, get_shape
 from repro.core.autotuner import autotune, make_mdp
 from repro.core.engine import ArrayMCTS, CachedMDP, TranspositionCache, make_tree
 from repro.core.engine.backend import TABLE1, SearchBackend, resolve_backend
 from repro.core.ensemble import ProTuner
 from repro.core.mcts import MCTS, MCTSConfig
 
-CELL = ("granite-moe-1b-a400m", "train_4k")
+from conftest import MOE_TRAIN_CELL as CELL
 
 
 def _mdp():

@@ -196,6 +196,176 @@ def test_partial_cost_batch_cache_consistency(batch, cut):
     assert [mdp.partial_cost(s) for s in mixed] == cold
 
 
+# ---------------------------------------------------------------------------
+# Evolutionary operator closure (core/evolve.py)
+#
+# The operator catalog moves option *indices*, never raw values, so closure
+# over ``ScheduleSpace`` should hold by construction — these properties pin
+# it: every operator (and uniform crossover) applied to a valid plan yields
+# a plan inside the space, and decoding the child plan re-encodes to exactly
+# the child's action tuple.
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def space_and_state(draw):
+    """A (space, valid action tuple) pair over reduced configs of all three
+    architecture families, both cell kinds, both meshes."""
+    arch = draw(st.sampled_from(
+        ["granite-3-2b", "granite-moe-1b-a400m", "falcon-mamba-7b"]
+    ))
+    shape_name = draw(st.sampled_from(["train_4k", "decode_32k"]))
+    mesh = draw(st.sampled_from([SINGLE_POD, MULTI_POD]))
+    space = ScheduleSpace(
+        get_config(arch).reduced(), get_shape(shape_name), mesh
+    )
+    seed = draw(st.integers(0, 2**31 - 1))
+    return space, tuple(space.random_actions(random.Random(seed)))
+
+
+@SETTINGS
+@given(space_and_state(), st.integers(0, 2**31 - 1))
+def test_every_mutation_operator_is_closed(s, opseed):
+    """Each single operator returns a DIFFERENT valid index for its stage,
+    and the mutated plan decodes and re-encodes to itself."""
+    from repro.core.evolve import encode_plan, mutation_operators
+
+    space, actions = s
+    rng = random.Random(opseed)
+    ops = mutation_operators(space)
+    # only single-option stages are excluded from the catalog
+    assert {d for _n, d, _o in ops} == {
+        d for d, st_ in enumerate(space.stages) if len(st_.options) >= 2
+    }
+    for name, depth, op in ops:
+        new_idx = op(actions[depth], rng)
+        assert 0 <= new_idx < len(space.stages[depth].options)
+        assert new_idx != actions[depth]
+        child = list(actions)
+        child[depth] = new_idx
+        plan = space.plan_from_actions(child)
+        assert getattr(plan, space.stages[depth].name) == \
+            space.stages[depth].options[new_idx]
+        assert encode_plan(space, plan) == tuple(child)
+
+
+@SETTINGS
+@given(space_and_state(), st.integers(0, 2**31 - 1), st.floats(0.01, 1.0))
+def test_mutate_is_closed_and_never_identity(s, opseed, rate):
+    from repro.core.evolve import encode_plan, mutate, mutation_operators
+
+    space, actions = s
+    ops = mutation_operators(space)
+    child = mutate(actions, random.Random(opseed), ops, rate)
+    for stage, a in zip(space.stages, child):
+        assert 0 <= a < len(stage.options)
+    assert encode_plan(space, space.plan_from_actions(child)) == child
+    if ops:  # mutate forces at least one operator when none fired
+        assert child != tuple(actions)
+
+
+@SETTINGS
+@given(space_and_state(), st.integers(0, 2**31 - 1), st.integers(0, 2**31 - 1))
+def test_crossover_is_closed(s, seed_b, seed_x):
+    from repro.core.evolve import crossover, encode_plan
+
+    space, a = s
+    b = tuple(space.random_actions(random.Random(seed_b)))
+    child = crossover(a, b, random.Random(seed_x))
+    for x, ga, gb in zip(child, a, b):
+        assert x in (ga, gb)
+    assert encode_plan(space, space.plan_from_actions(child)) == child
+
+
+# ---------------------------------------------------------------------------
+# The jitted pricing kernel's tolerance contract (pricing="jit")
+#
+# ``_terms_jitted`` replays the same float64 arithmetic as the certified
+# columnar kernel, but XLA is free to contract multiply-adds: empirically
+# the two agree to 1-2 ULPs (max relative difference ~3.5e-16 across these
+# grids on this build) — NOT bit-identical.  The pinned CONTRACT is
+# relative agreement within ``JIT_RTOL``; because it is a tolerance, the
+# jitted path carries the versioned ``JIT_PRICING_TAG`` so cache/store
+# entries priced under different contracts never mix.
+# ---------------------------------------------------------------------------
+
+_JIT_PAIRS = {}
+
+
+def _jit_pair(arch, shape_name, mesh):
+    """Memoized (jit model, columnar model, space) per cell — the jit
+    compile cache is per-model, so reusing models across hypothesis
+    examples bounds the XLA compile count for the whole module."""
+    key = (arch, shape_name, mesh.names)
+    if key not in _JIT_PAIRS:
+        cfg, shape = get_config(arch).reduced(), get_shape(shape_name)
+        _JIT_PAIRS[key] = (
+            AnalyticCostModel(cfg, shape, mesh, pricing="jit",
+                              columnar_min_batch=1),
+            AnalyticCostModel(cfg, shape, mesh),
+            ScheduleSpace(cfg, shape, mesh),
+        )
+    return _JIT_PAIRS[key]
+
+
+@SETTINGS
+@given(
+    st.sampled_from(["granite-3-2b", "granite-moe-1b-a400m",
+                     "falcon-mamba-7b"]),
+    st.sampled_from(["train_4k", "decode_32k"]),
+    st.lists(st.integers(0, 2**31 - 1), min_size=8, max_size=8, unique=True),
+)
+def test_jitted_kernel_matches_columnar_within_rtol(arch, shape_name, seeds):
+    """``pricing="jit"`` vs the exact columnar kernel on random plan
+    batches: elementwise relative agreement within JIT_RTOL (see module
+    note above for the exact-vs-ULP status), and the jit model carries a
+    non-exact pricing tag while both exact paths share "exact"."""
+    from repro.core.cost_model import JIT_PRICING_TAG, JIT_RTOL
+
+    jit, col, space = _jit_pair(arch, shape_name, SINGLE_POD)
+    plans = [space.random_plan(random.Random(s)) for s in seeds]
+    a = np.asarray(jit.cost_batch(plans))
+    b = np.asarray(col.cost_batch(plans))
+    np.testing.assert_allclose(a, b, rtol=JIT_RTOL, atol=0.0)
+    assert jit.pricing_tag == JIT_PRICING_TAG != "exact"
+    assert col.pricing_tag == "exact"
+
+
+def test_jitted_kernel_multipod_parity_fixed_batch():
+    """Deterministic multi-pod leg (pod-scaled dp, pod-link blending) of
+    the jit-vs-columnar contract — fixed batch so it costs exactly two
+    extra XLA compiles."""
+    from repro.core.cost_model import JIT_RTOL
+
+    for shape_name in ("train_4k", "decode_32k"):
+        jit, col, space = _jit_pair(
+            "granite-moe-1b-a400m", shape_name, MULTI_POD
+        )
+        plans = [space.random_plan(random.Random(s)) for s in range(16)]
+        np.testing.assert_allclose(
+            np.asarray(jit.cost_batch(plans)),
+            np.asarray(col.cost_batch(plans)),
+            rtol=JIT_RTOL, atol=0.0,
+        )
+
+
+def test_jit_crossover_threshold_lowered_and_pinned():
+    """Acceptance OR-branch: at batch 1 the jitted kernel does NOT beat the
+    warm scalar replay (jax dispatch is ~100µs flat on CPU vs ~30µs for
+    one scalar walk), so instead the measured jit-vs-scalar crossover —
+    between 4 and 8 on the decode headline cell — is pinned here as
+    JIT_MIN_BATCH, strictly below the columnar threshold (16).  Batches
+    under the threshold price through the EXACT scalar replay."""
+    from repro.core.cost_model import JIT_MIN_BATCH
+
+    assert JIT_MIN_BATCH == 8 < 16
+    cfg, shape = get_config("granite-3-2b").reduced(), get_shape("decode_32k")
+    m = AnalyticCostModel(cfg, shape, SINGLE_POD, pricing="jit")
+    assert m.columnar_min_batch == JIT_MIN_BATCH
+    exact = AnalyticCostModel(cfg, shape, SINGLE_POD)
+    assert exact.columnar_min_batch == 16
+
+
 @SETTINGS
 @given(st.integers(0, 10**6), st.floats(0.05, 0.5))
 def test_noisy_cost_model_deterministic(seed, sigma):

@@ -6,9 +6,8 @@ import pickle
 import random
 
 import pytest
+from conftest import DECODE_CELL, make_cell_mdp
 
-from repro.configs import get_config, get_shape
-from repro.core.cost_model import AnalyticCostModel
 from repro.core.engine import (
     ArrayMCTS,
     CachedMDP,
@@ -21,14 +20,10 @@ from repro.core.engine.batch import run_decision_batch
 from repro.core.ensemble import ProTuner
 from repro.core.mcts import MCTSConfig
 from repro.core.mdp import ScheduleMDP
-from repro.core.space import SINGLE_POD, ScheduleSpace
 
 
-def _mdp(arch="granite-3-2b", shape="decode_32k") -> ScheduleMDP:
-    cfg = get_config(arch).reduced()
-    sh = get_shape(shape)
-    space = ScheduleSpace(cfg, sh, SINGLE_POD)
-    return ScheduleMDP(space, AnalyticCostModel(cfg, sh, SINGLE_POD))
+def _mdp(arch=DECODE_CELL[0], shape=DECODE_CELL[1]) -> ScheduleMDP:
+    return make_cell_mdp(arch, shape)
 
 
 def _backend(space, mode="hybrid", audit_every=8, **kw):

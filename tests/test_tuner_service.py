@@ -21,7 +21,8 @@ from repro.service import (
 )
 from repro.service.store import request_key
 
-CELL = ("granite-3-2b", "train_4k")
+from conftest import TRAIN_CELL as CELL
+
 REQ = dict(arch=CELL[0], shape=CELL[1], algo="mcts_1s", seed=0,
            n_standard=2, n_greedy=1)
 

@@ -122,6 +122,8 @@ def autotune(
     cost: str = "analytic",
     n_workers: Optional[int] = None,
     worker_pool=None,
+    shm: Optional[bool] = None,
+    worker_batch: Optional[bool] = None,
     plan_store=None,
     pricing: Optional[str] = None,
 ) -> TuneResult:
@@ -137,8 +139,12 @@ def autotune(
     caps the pool — default one worker per core up to the tree count);
     ``cache`` forces the shared transposition cache on/off (default: on
     for the array engine); ``batch`` forces lockstep batched leaf
-    evaluation on/off (default: on for the array engine).  All algorithms
-    dispatch through the ``SearchBackend`` protocol
+    evaluation on/off (default: on for the array engine); ``shm`` forces
+    the pool's shared-memory cache transport on/off (default: auto — on
+    for pure-analytic parallel runs where POSIX shared memory exists);
+    ``worker_batch`` forces in-worker lockstep batching of each pinned
+    subset on/off (default: follow ``batch``).  All algorithms dispatch
+    through the ``SearchBackend`` protocol
     (``repro.core.engine.backend``).
 
     ``cost`` selects the serving layer of the cost stack for MCTS runs:
@@ -202,6 +208,8 @@ def autotune(
         cost=cost,
         n_workers=n_workers,
         worker_pool=worker_pool,
+        shm=shm,
+        worker_batch=worker_batch,
         seed_plans=seed_plans,
     )
     if plan_store is not None:

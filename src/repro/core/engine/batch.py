@@ -66,6 +66,7 @@ class _TreeCursor:
         "t", "mdp", "rng", "untried", "childlist", "best_state",
         "vc", "sc", "sr", "bc", "act",
         "da", "n_stages", "paper", "cp", "greedy", "binary",
+        "delta_base", "dparents", "dbest", "dtouched",
     )
 
     def __init__(self, t: ArrayMCTS):
@@ -75,6 +76,14 @@ class _TreeCursor:
         self.untried = t.untried
         self.childlist = t._childlist
         self.best_state = t.best_state
+        # per-round delta recording (pinned-worker reverse transport): the
+        # cursor's inline expand/backprop mirror ArrayMCTS's hooks, feeding
+        # the same record lists ``collect_delta`` packages; recording into
+        # them unfiltered is fine — collect_delta filters by ``base``
+        self.delta_base = t._delta_base
+        self.dparents = t._delta_parents
+        self.dbest = t._delta_best
+        self.dtouched = t._delta_touched
         size = t.size
         self.vc: List[int] = t.visit_counts[:size].tolist()
         self.sc: List[float] = t.sum_cost[:size].tolist()
@@ -148,6 +157,8 @@ class _TreeCursor:
             t.children[nid, slot] = child
             t.n_children[nid] = slot + 1
             childlist[nid].append(child)
+            if self.delta_base is not None:
+                self.dparents.append(nid)
             path.append(child)
             self.vc.append(0)
             self.sc.append(0.0)
@@ -233,6 +244,9 @@ class _TreeCursor:
             r = (t.baseline / cost) if cost > 0 else 0.0
         vc, sc, sr, bc = self.vc, self.sc, self.sr, self.bc
         best_state = self.best_state
+        base = self.delta_base
+        if base is not None:
+            self.dtouched.extend(n for n in path if n < base)
         for nid in path:
             vc[nid] += 1
             sc[nid] += cost
@@ -240,6 +254,8 @@ class _TreeCursor:
             if cost < bc[nid]:
                 bc[nid] = cost
                 best_state[nid] = terminal
+                if base is not None:
+                    self.dbest.append(nid)
 
     def flush(self):
         """Write the stat mirrors back into the canonical flat arrays (one
@@ -265,14 +281,6 @@ def run_decision_batch(
     share the per-decision budget, as ProTuner ensembles do."""
     if not trees:
         return []
-    if any(t._delta_base is not None for t in trees):
-        # the cursor's inline expand/backprop bypasses ArrayMCTS's delta
-        # recording hooks; a delta collected around a batched round would
-        # be silently incomplete
-        raise RuntimeError(
-            "run_decision_batch cannot run while delta recording is active; "
-            "use run_decision for delta-transported rounds"
-        )
     if mdp is None:
         mdp = trees[0].mdp
     cfg = trees[0].cfg

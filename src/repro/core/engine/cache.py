@@ -45,7 +45,7 @@ class TranspositionCache:
 
     __slots__ = (
         "terminal", "partial", "terminal_version", "partial_version",
-        "hits", "misses", "epoch",
+        "hits", "misses", "dedup", "epoch",
     )
 
     def __init__(self):
@@ -57,6 +57,10 @@ class TranspositionCache:
         self.partial_version: Dict[State, int] = {}
         self.hits = 0
         self.misses = 0
+        # subset of ``hits`` served by in-batch deduplication: a state that
+        # appeared earlier in the SAME miss batch (priced once, served K
+        # times) — the batched engines' structural win over scalar walks
+        self.dedup = 0
         # mutation epoch: bumped whenever the tables stop being append-only
         # (an eviction, or an in-place value/tag change during a merge) —
         # any outstanding export watermark from an older epoch is then
@@ -79,6 +83,7 @@ class TranspositionCache:
         return {
             "hits": self.hits,
             "misses": self.misses,
+            "dedup": self.dedup,
             "hit_rate": self.hit_rate,
             "terminal_entries": len(self.terminal),
             "partial_entries": len(self.partial),
@@ -105,6 +110,7 @@ class TranspositionCache:
         self.partial_version = state.get("partial_version", {})
         self.hits = 0
         self.misses = 0
+        self.dedup = 0
         self.epoch = 0
 
     def _merge_tbl(self, tbl, vtbl, new, vnew) -> None:
@@ -154,6 +160,7 @@ class TranspositionCache:
                         other.partial, other.partial_version)
         self.hits += other.hits
         self.misses += other.misses
+        self.dedup += other.dedup
 
     # -- incremental export (pinned-worker forward deltas) -------------
     # The pinned process-pool protocol ships each worker ONLY the cache
@@ -325,6 +332,7 @@ class CachedMDP:
                 hits += 1
             elif s in pending:
                 hits += 1  # duplicate miss: sequential order would hit
+                self.cache.dedup += 1
             else:
                 pending[s] = None
         self.cache.hits += hits

@@ -17,23 +17,46 @@ only a FORWARD DELTA:
 * ``advance`` — the previous round's root-synchronization action (the
   worker applies it to each pinned tree with ``advance_root``, exactly as
   the master did to its canonical copies);
-* ``cache`` — the sibling trees' new transposition-cache entries since
+* ``shm`` — on pure-analytic runs with POSIX shared memory available
+  (the default), the sibling cache entries do not ride the pipe at all:
+  the master appends every round's new entries to a shared-memory log
+  (``engine/shm_cache.ShmCacheLog``) and the forward delta carries only
+  the segment name and write cursor; the worker maps the segment
+  read-only and folds the unseen rows into its local cache
+  (``ShmCacheReader.fold``) — cross-process cache hits with O(1) submit
+  payload.  The segment's lifecycle is owned by this pool: created at
+  init-snapshot time, resized by publish-new-then-swap, swapped (and the
+  old generation unlinked) on worker-death ``_resync``, unlinked on
+  ``shutdown()``;
+* ``cache`` — the export fallback: the sibling trees' new entries since
   this worker's last submit, exported incrementally from the master's
   merged cache (``TranspositionCache.export_since`` against a per-worker
-  watermark) so the shared-cache hit rate is preserved without ever
-  re-shipping the table;
+  watermark).  Engages when shm is unavailable or disabled, and whenever
+  the cache stops being append-only (a learned-tag eviction or
+  exact-wins rewrite bumps the mutation ``epoch``) — the pool then
+  unlinks the log and degrades every worker to one full-export resync,
+  exactly as the epoch machinery already degrades stale watermarks;
 * ``params`` — learned-model parameters, ONLY when the master's fit
   generation changed (``HybridCostBackend.params_delta``); workers keep
   serving the old generation until a new one arrives.
 
 The worker applies the forward delta, runs each pinned tree's decision
-round, and returns the existing reverse delta
-(``ArrayMCTS.begin_delta``/``collect_delta``) plus its round's new cache
-entries and counter diffs — so the numeric payload in BOTH directions
-scales with the round, not the tree.  Payload sizes are measured at the
-pickle boundary (``submit_bytes``/``return_bytes``/``snapshot_bytes``,
-surfaced on ``TuneResult``), so the O(round) claim is a number CI can
-gate, not an assertion.
+round — scalar ``run_decision`` per tree, or ONE lockstep
+``run_decision_batch`` over its whole pinned subset when the pool was
+built with ``worker_batch=True`` (batched leaf pricing and the pool then
+compose: each worker prices one deduplicated miss batch per step through
+the columnar kernel instead of K scalar walks) — and returns the
+existing reverse delta (``ArrayMCTS.begin_delta``/``collect_delta``)
+plus its round's new cache entries and counter diffs — so the numeric
+payload in BOTH directions scales with the round, not the tree.  Payload
+sizes are measured at the pickle boundary
+(``submit_bytes``/``return_bytes``/``snapshot_bytes``, surfaced on
+``TuneResult``), so the O(round) claim is a number CI can gate, not an
+assertion; per-worker hit/miss/dedup counters and the shm-vs-export
+serving split are surfaced the same way (``PinnedWorkerPool.stats()``),
+as is the round's cross-worker duplicate-eval count (distinct states
+priced by two or more workers in the same round — the quantity the
+shared cache exists to crush).
 
 Determinism and fault tolerance: the master keeps the CANONICAL trees —
 every reverse delta is applied to its copy (``apply_delta`` reproduces
@@ -55,6 +78,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.engine.cache import CachedMDP
+from repro.core.engine.shm_cache import HAVE_SHM, ShmCacheLog, ShmCacheReader
 
 _PROTO = pickle.HIGHEST_PROTOCOL
 
@@ -82,15 +106,24 @@ def pick_mp_context():
 # ---------------------------------------------------------------------------
 # Worker side
 # ---------------------------------------------------------------------------
-def _apply_forward(mdp, trees: Dict[int, object], fwd: dict) -> None:
+def _apply_forward(mdp, trees: Dict[int, object], fwd: dict,
+                   reader: Optional[ShmCacheReader] = None) -> None:
     """Apply a round's forward delta: params first (a new fit generation
     evicts the local copies of predictions the master already evicted),
-    then the sibling cache entries, then the root advance (which prices
-    nothing — ``advance_root`` only steps the MDP structure)."""
+    then the sibling cache entries (folded from the shared-memory log
+    when the round message carries a cursor, applied from the pickled
+    export otherwise), then the root advance (which prices nothing —
+    ``advance_root`` only steps the MDP structure)."""
     cached = isinstance(mdp, CachedMDP)
     params = fwd.get("params")
     if params is not None and cached and mdp.cost_backend is not None:
         mdp.cost_backend.apply_params(params)
+    shm = fwd.get("shm")
+    if shm is not None and reader is not None and cached:
+        if isinstance(shm, tuple):  # generation changed: new segment name
+            reader.fold(mdp.cache, shm[0], shm[1])
+        else:  # steady round: bare cursor over the current segment
+            reader.fold(mdp.cache, reader.name, shm)
     cache = fwd.get("cache")
     if cache is not None and cached:
         entries, full = cache
@@ -101,25 +134,44 @@ def _apply_forward(mdp, trees: Dict[int, object], fwd: dict) -> None:
             trees[tid].advance_root(advance)
 
 
-def _run_round(mdp, trees: Dict[int, object], fwd: dict):
-    _apply_forward(mdp, trees, fwd)
+def _run_round(mdp, trees: Dict[int, object], fwd: dict,
+               reader: Optional[ShmCacheReader] = None,
+               batch: bool = False):
+    _apply_forward(mdp, trees, fwd, reader)
     cached = isinstance(mdp, CachedMDP)
     backend = mdp.cost_backend if cached else None
     if cached:
         cache = mdp.cache
-        h0, m0 = cache.hits, cache.misses
+        h0, m0, d0 = cache.hits, cache.misses, cache.dedup
         wm = cache.watermark()
     serve0 = backend.counters() if backend is not None else None
     evals0 = getattr(mdp.cost_model, "n_evals", None)
     results = {}
-    for tid in sorted(trees):  # deterministic within-worker order
-        tree = trees[tid]
-        tree.begin_delta()
-        res = tree.run_decision()
-        results[tid] = (tree.collect_delta(), res)
+    tids = sorted(trees)  # deterministic within-worker order
+    if batch and tids:
+        # in-worker lockstep: ONE batched decision round over the whole
+        # pinned subset — delta recording is cursor-aware (engine/batch),
+        # so the reverse transport is unchanged
+        from repro.core.engine.batch import run_decision_batch
+
+        for tid in tids:
+            trees[tid].begin_delta()
+        ress = run_decision_batch([trees[tid] for tid in tids], mdp)
+        for tid, res in zip(tids, ress):
+            results[tid] = (trees[tid].collect_delta(), res)
+    else:
+        for tid in tids:
+            tree = trees[tid]
+            tree.begin_delta()
+            res = tree.run_decision()
+            results[tid] = (tree.collect_delta(), res)
     stats = cache_new = serving = evals = None
     if cached:
-        stats = (cache.hits - h0, cache.misses - m0)
+        stats = {
+            "hits": cache.hits - h0,
+            "misses": cache.misses - m0,
+            "dedup": cache.dedup - d0,
+        }
         # this round's new entries: everything past the round-start
         # watermark (the worker never refits/evicts, so its tables are
         # append-only within a round and the islice export is exact)
@@ -137,6 +189,8 @@ def _worker_main(conn) -> None:
     MDP for the whole run, answer one ``round`` message at a time."""
     mdp = None
     trees: Dict[int, object] = {}
+    reader: Optional[ShmCacheReader] = None
+    batch = False
     try:
         while True:
             try:
@@ -148,14 +202,27 @@ def _worker_main(conn) -> None:
                 # (mdp, trees) unpickle from ONE message, so the trees'
                 # shared mdp reference dedups to a single object
                 mdp, trees = msg[1], msg[2]
+                opts = msg[3] if len(msg) > 3 else {}
+                batch = bool(opts.get("batch"))
+                if reader is not None:
+                    reader.close()
+                    reader = None
+                shm_info = opts.get("shm")
+                if shm_info is not None and HAVE_SHM:
+                    # attach at the snapshot-time cursor: the pickled
+                    # cache already holds every row up to it
+                    reader = ShmCacheReader()
+                    reader.attach(*shm_info)
                 conn.send_bytes(pickle.dumps(("ok",), _PROTO))
             elif kind == "round":
                 try:
-                    out = _run_round(mdp, trees, msg[1])
+                    out = _run_round(mdp, trees, msg[1], reader, batch)
                 except Exception:  # deterministic errors surface master-side
                     out = ("err", traceback.format_exc())
                 conn.send_bytes(pickle.dumps(out, _PROTO))
             elif kind == "stop":
+                if reader is not None:
+                    reader.close()
                 return
     except (BrokenPipeError, ConnectionResetError, KeyboardInterrupt, OSError):
         return
@@ -178,6 +245,15 @@ class _Worker:
     # watermark, so without this they would be echoed straight back next
     # round — ~1/n_workers of every incremental export, pure waste
     echo: Optional[tuple] = None
+    # shm-log cursor and segment name as of the last message this worker
+    # was sent (steady rounds ship the bare cursor int; the name rides
+    # along only when the generation changed)
+    shm_count: int = 0
+    shm_name: Optional[str] = None
+    # cumulative counters (hits/misses/dedup from round returns,
+    # shm_entries/export_entries accounted master-side at submit) —
+    # carried across death-resyncs, surfaced by ``PinnedWorkerPool.stats``
+    stats: Dict[str, int] = field(default_factory=dict)
 
 
 class PinnedWorkerPool:
@@ -191,11 +267,14 @@ class PinnedWorkerPool:
     """
 
     def __init__(self, trees: List[object], mdp, *,
-                 n_workers: Optional[int] = None, mp_context=None):
+                 n_workers: Optional[int] = None, mp_context=None,
+                 shm: Optional[bool] = None, worker_batch: bool = False):
         self.trees = trees
         self.mdp = mdp
         self.cached = isinstance(mdp, CachedMDP)
         self.backend = mdp.cost_backend if self.cached else None
+        self.shm_opt = shm  # None = auto (on for pure-analytic runs)
+        self.worker_batch = worker_batch
         ctx = mp_context if mp_context is not None else pick_mp_context()
         self._ctx = ctx
         n = n_workers or os.cpu_count() or 2
@@ -210,6 +289,19 @@ class PinnedWorkerPool:
         self.return_bytes_rounds: List[int] = []
         self.n_worker_restarts = 0
         self.extra_evals = 0  # worker-side cost-model evals (per-round diffs)
+        # cross-worker duplicate evals: per round, the number of (state,
+        # table) keys that TWO OR MORE workers priced independently —
+        # deterministic (derived from the returned exports, which depend
+        # only on search trajectories), so CI can gate on it
+        self.dup_evals = 0
+        self.dup_evals_rounds: List[int] = []
+        self._shm: Optional[ShmCacheLog] = None
+        self._shm_wm = None
+        self.shm_used = False  # log existed for this run (survives shutdown)
+        if self._shm_eligible():
+            self._shm = ShmCacheLog()
+            self._shm_wm = mdp.cache.watermark()
+            self.shm_used = True
         # round-robin pinning: tree i lives on worker i % n for the run.
         # Spawn + init overlap across workers: all processes launch and
         # receive their snapshots before the first (blocking) ack read.
@@ -221,6 +313,17 @@ class PinnedWorkerPool:
             self._await_init(w)
 
     # -- lifecycle -----------------------------------------------------
+    def _shm_eligible(self) -> bool:
+        """shm serves the append-only pure-analytic path only: a mounted
+        cost backend can evict/rewrite entries, which the log cannot
+        express (the export/epoch protocol handles those runs)."""
+        return (HAVE_SHM and self.shm_opt is not False and self.cached
+                and self.backend is None)
+
+    @property
+    def shm_enabled(self) -> bool:
+        return self._shm is not None
+
     def _launch(self, tids: List[int]) -> _Worker:
         """Start a worker process and ship its init snapshot: this
         worker's canonical trees plus the shared MDP (cache counters and
@@ -233,8 +336,16 @@ class PinnedWorkerPool:
         proc.start()
         child.close()
         w = _Worker(proc, parent, tids)
+        opts = {"batch": self.worker_batch}
+        if self._shm is not None:
+            # attach-at-cursor: the snapshot cache below already holds
+            # every row up to the current count
+            opts["shm"] = (self._shm.name, self._shm.count)
+            w.shm_count = self._shm.count
+            w.shm_name = self._shm.name
         payload = pickle.dumps(
-            ("init", self.mdp, {tid: self.trees[tid] for tid in w.tids}),
+            ("init", self.mdp, {tid: self.trees[tid] for tid in w.tids},
+             opts),
             _PROTO,
         )
         w.conn.send_bytes(payload)
@@ -268,32 +379,70 @@ class PinnedWorkerPool:
         if w.proc.is_alive():
             w.proc.terminate()
         w.proc.join(timeout=5)
+        if self._shm is not None:
+            # generation bump: the dead worker can never have the retiring
+            # segment mapped again; live workers and the respawn get the
+            # new name, and the old file is unlinked at the round boundary
+            self._shm.swap()
         fresh = self._spawn(w.tids)
+        fresh.stats = w.stats  # counters survive the death
         self._workers[self._workers.index(w)] = fresh
         return fresh
 
-    def rebind(self, trees: List[object], mdp) -> None:
+    def rebind(self, trees: List[object], mdp, *,
+               shm: Optional[bool] = None,
+               worker_batch: Optional[bool] = None) -> None:
         """Re-point the LIVE worker processes at a new run's canonical
         trees + MDP (the daemon reuses one pool across tuning runs, so
         worker spawn cost is paid once per process, not once per request).
 
         Ships a fresh ``init`` snapshot to every worker — the worker loop
         already accepts repeated inits — and resets all per-worker cursors
-        (cache watermark, model generation, echo set) to the new run's
-        state.  A worker that died between runs is respawned here."""
+        (cache watermark, model generation, echo set, shm cursor) to the
+        new run's state; the previous run's shm segment is unlinked and a
+        fresh log created if the new run is shm-eligible.  A worker that
+        died between runs is respawned here."""
         self.trees = trees
         self.mdp = mdp
         self.cached = isinstance(mdp, CachedMDP)
         self.backend = mdp.cost_backend if self.cached else None
+        if worker_batch is not None:
+            self.worker_batch = worker_batch
+        self.shm_opt = shm  # new run's preference (None = auto)
+        if self._shm is not None:
+            self._shm.close()
+            self._shm.unlink()
+            self._shm = None
+            self._shm_wm = None
+        self.shm_used = False
+        if self._shm_eligible():
+            self._shm = ShmCacheLog()
+            self._shm_wm = mdp.cache.watermark()
+            self.shm_used = True
+        # per-run counters restart with the new run's trees
+        self.dup_evals = 0
+        self.dup_evals_rounds = []
+        self.submit_bytes_rounds = []
+        self.return_bytes_rounds = []
         n = len(self._workers)
         pending = []
         for wi, w in enumerate(list(self._workers)):
             w.tids = [t for t in range(len(trees)) if t % n == wi]
+            opts = {"batch": self.worker_batch}
+            if self._shm is not None:
+                opts["shm"] = (self._shm.name, self._shm.count)
+                w.shm_count = self._shm.count
+                w.shm_name = self._shm.name
+            else:
+                w.shm_count = 0
+                w.shm_name = None
             payload = pickle.dumps(
-                ("init", mdp, {tid: trees[tid] for tid in w.tids}), _PROTO)
+                ("init", mdp, {tid: trees[tid] for tid in w.tids}, opts),
+                _PROTO)
             try:
                 w.conn.send_bytes(payload)
             except (BrokenPipeError, ConnectionResetError, OSError):
+                w.stats = {}  # new run: counters restart even on respawn
                 self._resync(w)  # respawn ships the same snapshot
                 continue
             self.snapshot_bytes += len(payload)
@@ -304,6 +453,7 @@ class PinnedWorkerPool:
             w.just_synced = True
             w.submitted = False
             w.echo = None
+            w.stats = {}
             pending.append(wi)
         for wi in pending:
             w = self._workers[wi]
@@ -326,15 +476,33 @@ class PinnedWorkerPool:
                 w.conn.close()
             except OSError:
                 pass
+        if self._shm is not None:
+            self._shm.close()
+            self._shm.unlink()
+            self._shm = None
 
     # -- the per-round protocol ----------------------------------------
     def _forward(self, w: _Worker, advance: Optional[int]) -> dict:
         """Build this worker's forward delta and move its cursors.  A
         just-(re)synced worker's snapshot already contains the advance,
-        the full cache, and the current model — everything ships empty."""
+        the full cache, and the current model — everything ships empty.
+        With the shm log live, sibling cache entries ship as an O(1)
+        (segment name, cursor) pair instead of a pickled export."""
         fwd: dict = {"advance": None if w.just_synced else advance}
         w.just_synced = False
-        if self.cached:
+        if self._shm is not None:
+            if w.shm_name == self._shm.name:
+                fwd["shm"] = self._shm.count  # steady: bare cursor int
+            else:
+                fwd["shm"] = (self._shm.name, self._shm.count)
+                w.shm_name = self._shm.name
+            s = w.stats
+            s["shm_entries"] = (
+                s.get("shm_entries", 0) + self._shm.count - w.shm_count)
+            w.shm_count = self._shm.count
+            # the per-worker export watermark idles while shm serves; it
+            # is re-armed (set to None → one full export) on shm disable
+        elif self.cached:
             if w.watermark != (wm := self.mdp.cache.watermark()):
                 entries, full = self.mdp.cache.export_since(w.watermark)
                 if not full and w.echo is not None:
@@ -352,6 +520,10 @@ class PinnedWorkerPool:
                     )
                 fwd["cache"] = (entries, full)
                 w.watermark = wm
+                s = w.stats
+                s["export_entries"] = (
+                    s.get("export_entries", 0)
+                    + len(entries[0]) + len(entries[1]))
             else:
                 fwd["cache"] = None
             w.echo = None
@@ -406,6 +578,7 @@ class PinnedWorkerPool:
             except (BrokenPipeError, ConnectionResetError, OSError):
                 self._resync(w)  # snapshot embeds the advance; collect submits
         results: Dict[int, object] = {}
+        exports: List[tuple] = []  # per-worker returned key sets (dup count)
         for i in range(len(self._workers)):
             # re-read: _collect may have replaced the worker via resync
             got = self._collect(self._workers[i], advance)
@@ -417,17 +590,78 @@ class PinnedWorkerPool:
             if self.cached and cache_new is not None:
                 self.mdp.cache.apply_export(cache_new)
                 if stats is not None:
-                    self.mdp.cache.hits += stats[0]
-                    self.mdp.cache.misses += stats[1]
-                if self.backend is None:
-                    # pure-analytic: remember what this worker just sent
-                    # so next round's forward export skips echoing it back
-                    self._workers[i].echo = (
-                        set(cache_new[0]), set(cache_new[1]))
+                    self.mdp.cache.hits += stats["hits"]
+                    self.mdp.cache.misses += stats["misses"]
+                    self.mdp.cache.dedup += stats["dedup"]
+                    ws = self._workers[i].stats
+                    for k, v in stats.items():
+                        ws[k] = ws.get(k, 0) + v
+                keys = (set(cache_new[0]), set(cache_new[1]))
+                exports.append(keys)
+                if self.backend is None and self._shm is None:
+                    # pure-analytic export mode: remember what this worker
+                    # just sent so next round's export skips echoing it
+                    # back (the shm log has no echo problem — re-folding
+                    # your own exact entry is a no-op dict insert)
+                    self._workers[i].echo = keys
             if serving is not None and self.backend is not None:
                 self.backend.merge_counters(serving)
             if evals is not None:
                 self.extra_evals += evals
+        # cross-worker duplicate evals: a key in >=2 workers' returns was
+        # priced that many times this round — the re-pricing the shared
+        # cache exists to eliminate (deterministic: a pure function of
+        # the search trajectories, not of timing)
+        dup = 0
+        if len(exports) > 1:
+            for k in (0, 1):
+                counts: Dict[object, int] = {}
+                for keys in exports:
+                    for s in keys[k]:
+                        counts[s] = counts.get(s, 0) + 1
+                dup += sum(c - 1 for c in counts.values() if c > 1)
+        self.dup_evals += dup
+        self.dup_evals_rounds.append(dup)
+        if self._shm is not None:
+            self._shm_append()
         self.submit_bytes_rounds.append(self._round_submit)
         self.return_bytes_rounds.append(self._round_return)
         return [results[tid] for tid in range(len(self.trees))]
+
+    def _shm_append(self) -> None:
+        """Publish the round's new master-cache entries to the shm log.
+        Any sign the tables stopped being append-only (an epoch bump, a
+        learned tag) disables shm for the rest of the run: the log is
+        unlinked and every worker degrades to one full-export resync —
+        the same path a stale watermark already takes."""
+        cache = self.mdp.cache
+        entries, full = cache.export_since(self._shm_wm)
+        if full or entries[2] or entries[3]:
+            self._shm_disable()
+            return
+        self._shm.append(entries)
+        self._shm_wm = cache.watermark()
+        self._shm.drain_retired()  # no round message names old gens now
+
+    def _shm_disable(self) -> None:
+        if self._shm is None:
+            return
+        self._shm.close()
+        self._shm.unlink()
+        self._shm = None
+        self._shm_wm = None
+        for w in self._workers:
+            w.watermark = None  # next forward: full export resync
+            w.echo = None
+
+    # -- introspection --------------------------------------------------
+    def stats(self) -> dict:
+        """Per-worker counters and pool-level dedup/dup-eval totals, in
+        worker-slot order (surfaced on ``TuneResult.stats``)."""
+        return {
+            "shm": self.shm_used,
+            "worker_batch": self.worker_batch,
+            "dup_evals": self.dup_evals,
+            "dup_evals_rounds": list(self.dup_evals_rounds),
+            "workers": [dict(w.stats) for w in self._workers],
+        }

@@ -102,6 +102,11 @@ class TuneResult:
     submit_bytes_rounds: List[int] = field(default_factory=list)
     return_bytes_rounds: List[int] = field(default_factory=list)
     n_worker_restarts: int = 0
+    # pinned-pool serving stats (engine/workers.PinnedWorkerPool.stats):
+    # per-worker hit/miss/dedup counters, the shm-vs-export serving split,
+    # and the per-round cross-worker duplicate-eval counts; empty for
+    # non-pool runs
+    stats: dict = field(default_factory=dict)
     # candidates whose real measurement failed and were re-ranked by their
     # exact analytic cost instead (mcts_cost+real_* graceful degradation)
     n_measure_failures: int = 0
@@ -150,7 +155,17 @@ class ProTuner:
         cost: str = "analytic",
         n_workers: Optional[int] = None,
         worker_pool: Optional[PinnedWorkerPool] = None,
+        shm: Optional[bool] = None,
+        worker_batch: Optional[bool] = None,
     ):
+        # parallel-transport levers (engine/workers.py): ``shm`` backs the
+        # forward cache delta with a shared-memory log (None = auto: on
+        # for pure-analytic runs where shared memory exists);
+        # ``worker_batch`` runs each worker's pinned subset through ONE
+        # lockstep run_decision_batch per round (None = follow ``batch``,
+        # so the two batching levers compose by default on the array
+        # engine)
+        self.shm = shm
         # measure_backend: a fleet-bound FleetMeasure (core/measure_fleet).
         # It is callable with the same plan -> seconds contract, so it can
         # stand in for measure_fn wholesale; when present, candidate
@@ -187,6 +202,7 @@ class ProTuner:
         if batch is None:
             batch = engine == "array"
         self.batch = batch
+        self.worker_batch = batch if worker_batch is None else worker_batch
         if backend is not None and not cache and not isinstance(mdp, CachedMDP):
             raise ValueError(
                 "cost='learned'/'hybrid' requires the transposition cache "
@@ -361,7 +377,10 @@ class ProTuner:
                 if self._ext_pool is not None:
                     assert all(isinstance(t, ArrayMCTS) for t in self.trees), \
                         "a shared worker pool requires the array engine"
-                    self._ext_pool.rebind(self.trees, self.mdp)
+                    self._ext_pool.rebind(
+                        self.trees, self.mdp, shm=self.shm,
+                        worker_batch=self.worker_batch,
+                    )
                     self._pool = self._ext_pool
                 elif all(isinstance(t, ArrayMCTS) for t in self.trees):
                     # persistent pinned workers: trees + serve-only mdp
@@ -369,6 +388,7 @@ class ProTuner:
                     # both directions (engine/workers.py)
                     self._pool = PinnedWorkerPool(
                         self.trees, self.mdp, n_workers=self.n_workers,
+                        shm=self.shm, worker_batch=self.worker_batch,
                     )
                 else:
                     # reference engine: stateless whole-tree round trips
@@ -481,6 +501,7 @@ class ProTuner:
             submit_bytes_rounds=list(pool.submit_bytes_rounds) if pool else [],
             return_bytes_rounds=list(pool.return_bytes_rounds) if pool else [],
             n_worker_restarts=pool.n_worker_restarts if pool else 0,
+            stats=pool.stats() if pool else {},
             n_measure_failures=self.n_measure_failures,
         )
 
@@ -512,6 +533,8 @@ class MCTSEnsembleBackend:
         cost=None,  # None -> the backend's configured self.cost
         n_workers: Optional[int] = None,
         worker_pool=None,
+        shm: Optional[bool] = None,
+        worker_batch: Optional[bool] = None,
         **_,
     ) -> TuneResult:
         mc = dataclasses.replace(self.config, seed=seed)
@@ -534,6 +557,8 @@ class MCTSEnsembleBackend:
             cost=cost if cost is not None else self.cost,
             n_workers=n_workers,
             worker_pool=worker_pool,
+            shm=shm,
+            worker_batch=worker_batch,
         )
         res = tuner.run(time_budget_s=time_budget_s)
         res.algo = self.algo

@@ -163,6 +163,8 @@ class TunerService:
             parallel=parallel,
             n_workers=exec_knobs.get("n_workers", self.n_workers),
             worker_pool=self._shared_pool(mdp) if parallel else None,
+            shm=exec_knobs.get("shm"),
+            worker_batch=exec_knobs.get("worker_batch"),
             measure_backend=measure_backend,
         )
         self.store.record(req, res)
@@ -184,6 +186,9 @@ class TunerService:
                 "return_bytes": self.pool.return_bytes,
                 "snapshot_bytes": self.pool.snapshot_bytes,
                 "n_worker_restarts": self.pool.n_worker_restarts,
+                # last run's serving split + cross-worker duplicate evals
+                # (per-worker hit/miss/dedup and shm-vs-export counters)
+                **self.pool.stats(),
             }
         return out
 

@@ -136,30 +136,48 @@ def test_ensemble_identical_across_engines(cell):
     ref = run(engine="reference", cache=False)
     arr = run(engine="array", batch=False)
     bat = run(engine="array", batch=True)
-    par = run(engine="array", parallel=True)  # pinned process-pool workers
+    # pinned process-pool workers, pool defaults (shm transport +
+    # in-worker lockstep batching auto-on for this pure-analytic run)
+    par = run(engine="array", parallel=True)
+    # the transport/batching matrix at 2 workers (trees split across
+    # workers, so the shm fold and the export echo both carry real
+    # cross-worker traffic): export baseline, shm without in-worker
+    # batching, shm with it — all bit-identical
+    exp = run(engine="array", parallel=True, n_workers=2,
+              shm=False, worker_batch=False)
+    shm = run(engine="array", parallel=True, n_workers=2,
+              shm=True, worker_batch=False)
+    lock = run(engine="array", parallel=True, n_workers=2,
+               shm=True, worker_batch=True)
     assert arr == ref
     assert bat == ref
     assert par == ref
+    assert exp == ref
+    assert shm == ref
+    assert lock == ref
 
 
 # ---------------------------------------------------------------------------
 # Parallel legs over the grid dimensions: the pinned process pool
 # (engine/workers.py) must reproduce the sequential ensemble bit-for-bit
-# for every UCB variant / simulation policy / reward mode.  One
+# for every UCB variant / simulation policy / reward mode, across both
+# cache transports (shared-memory log vs pickled exports) and both
+# in-worker evaluation modes (lockstep-batched vs per-tree).  One
 # representative config per UCB keeps the pool spawns inside the tier-1
 # budget; the full sequential grid above already certifies the engines,
 # and the pool's transport is value-blind (pure-memo cache entries +
 # per-round tree deltas), so any divergence here is a protocol bug.
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize(
-    "ucb,simulation,reward",
+    "ucb,simulation,reward,shm,worker_batch",
     [
-        ("paper", "random", "cost"),
-        ("cp10", "greedy", "binary"),
-        ("sqrt2", "greedy", "cost"),
+        ("paper", "random", "cost", None, None),    # pool defaults
+        ("cp10", "greedy", "binary", False, False),  # export transport
+        ("sqrt2", "greedy", "cost", True, True),     # shm + lockstep
     ],
 )
-def test_parallel_identical_across_grid(ucb, simulation, reward):
+def test_parallel_identical_across_grid(ucb, simulation, reward, shm,
+                                        worker_batch):
     cfg = MCTSConfig(
         ucb=ucb, simulation=simulation, reward_mode=reward,
         iters_per_decision=8,
@@ -168,7 +186,8 @@ def test_parallel_identical_across_grid(ucb, simulation, reward):
     def run(parallel):
         res = ProTuner(
             _mdp("moe_train"), n_standard=2, n_greedy=1, mcts_config=cfg,
-            seed=1, parallel=parallel,
+            seed=1, parallel=parallel, n_workers=2, shm=shm,
+            worker_batch=worker_batch,
         ).run()
         return (
             res.plan,

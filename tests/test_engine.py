@@ -199,6 +199,70 @@ def test_delta_rejects_mismatched_base():
         a.apply_delta(delta)
 
 
+def test_batched_round_under_delta_matches_per_tree():
+    """In-worker lockstep batching composes with delta recording (the
+    shm-pool configuration: a pinned worker batches its subset's rounds
+    while recording per-tree deltas).  A ``run_decision_batch`` round with
+    delta recording active must return the same results as per-tree
+    ``run_decision`` rounds, and the collected deltas, applied to
+    pre-round master copies, must rebuild each worker tree field for
+    field."""
+    import pickle
+
+    import numpy as np
+
+    from repro.core.engine.batch import run_decision_batch
+
+    def grow(mdp, seeds):
+        trees = []
+        for s in seeds:
+            t = ArrayMCTS(mdp, MCTSConfig(iters_per_decision=16, seed=s))
+            r = t.run_decision()  # a real pre-round tree, not a stub root
+            t.advance_root(r.action)
+            trees.append(t)
+        return trees
+
+    m_bat, m_seq = CachedMDP(_mdp()), CachedMDP(_mdp())
+    bat = grow(m_bat, (6, 7))
+    seq = grow(m_seq, (6, 7))
+    masters = [pickle.loads(pickle.dumps(t)) for t in bat]  # pre-round
+
+    for t in bat:
+        t.begin_delta()
+    res_bat = run_decision_batch(bat, m_bat)
+    deltas = [t.collect_delta() for t in bat]
+
+    for t in seq:
+        t.begin_delta()
+    res_seq = [t.run_decision() for t in seq]
+    for t in seq:
+        t.collect_delta()
+
+    key = lambda r: (r.action, r.best_cost, r.best_state, r.iterations)
+    assert [key(r) for r in res_bat] == [key(r) for r in res_seq]
+    # batching never double-prices a shared leaf, delta recording or not
+    assert m_bat.mdp.cost_model.n_evals == m_seq.mdp.cost_model.n_evals
+    assert (m_bat.cache.hits, m_bat.cache.misses) == (
+        m_seq.cache.hits, m_seq.cache.misses)
+
+    for master, delta, worker in zip(masters, deltas, bat):
+        master.apply_delta(delta)
+        assert master.size == worker.size
+        n = master.size
+        for name in ("visit_counts", "sum_cost", "sum_reward", "best_cost",
+                     "node_action", "n_children"):
+            np.testing.assert_array_equal(
+                getattr(master, name)[:n], getattr(worker, name)[:n],
+                err_msg=name)
+        w = worker.children.shape[1]
+        np.testing.assert_array_equal(
+            master.children[:n, :w], worker.children[:n, :w])
+        assert master.untried == worker.untried
+        assert master._childlist == worker._childlist
+        assert master.best_state == worker.best_state
+        assert master.rng.getstate() == worker.rng.getstate()
+
+
 # ---------------------------------------------------------------------------
 # Transposition cache
 # ---------------------------------------------------------------------------

@@ -109,6 +109,15 @@ def test_rebalanced_pipeline_is_exact():
     np.testing.assert_array_equal(recomputed["inputs"], orig[2]["inputs"])
 
 
+def _shm_segments():
+    """Live repro shm cache segments (Linux: files in /dev/shm)."""
+    try:
+        return {f for f in os.listdir("/dev/shm")
+                if f.startswith("repro-cache-")}
+    except FileNotFoundError:  # pragma: no cover - non-Linux shm
+        return set()
+
+
 def test_pinned_worker_death_resync_identical_to_sequential(monkeypatch):
     """Kill a pinned search worker mid-run — twice, in different rounds.
     The master must respawn it and reseed it from its CANONICAL tree
@@ -116,8 +125,12 @@ def test_pinned_worker_death_resync_identical_to_sequential(monkeypatch):
     replacement re-runs the lost round from the identical pre-round state
     (same pickled RNG), so the tuning result — plan, cost, decision
     sequence — is bit-identical to the sequential path regardless of the
-    deaths."""
+    deaths.  Each resync also swaps the shm cache segment to a fresh
+    generation (the dead worker's mapping is unknowable); every
+    generation must be unlinked by the end of the run — no /dev/shm
+    leak."""
     from repro.core.autotuner import make_mdp
+    from repro.core.engine.shm_cache import HAVE_SHM
     from repro.core.ensemble import ProTuner
     from repro.core.mcts import MCTSConfig
 
@@ -144,6 +157,7 @@ def test_pinned_worker_death_resync_identical_to_sequential(monkeypatch):
         return orig(self)
 
     monkeypatch.setattr(ProTuner, "_round_pinned", killing)
+    pre = _shm_segments()
     tuner = make(True)
     par = tuner.run()
     assert par.n_worker_restarts == 2
@@ -153,6 +167,12 @@ def test_pinned_worker_death_resync_identical_to_sequential(monkeypatch):
     assert [d["action"] for d in par.decisions] == [
         d["action"] for d in seq.decisions
     ]
+    # the shm transport survived both deaths (pure-analytic run) and every
+    # generation — the two retired by resync swaps included — is unlinked
+    # once the run's pool shuts down
+    if HAVE_SHM:
+        assert par.stats.get("shm") is True
+    assert not (_shm_segments() - pre)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,181 @@
+"""Shared-memory transposition-cache log (``engine/shm_cache.py``):
+layout roundtrip, the resize/swap generation protocol, per-pool segment
+namespacing, and lifecycle — no /dev/shm residue after ``shutdown()``,
+and two pools in one process never collide."""
+import os
+
+import pytest
+
+from conftest import TRAIN_CELL
+from repro.core.engine.cache import CachedMDP, TranspositionCache
+from repro.core.engine.shm_cache import HAVE_SHM, ShmCacheLog, ShmCacheReader
+
+pytestmark = pytest.mark.skipif(
+    not HAVE_SHM, reason="no POSIX shared memory on this platform")
+
+
+def _segments():
+    """Names of live repro cache segments (Linux: files in /dev/shm)."""
+    try:
+        return {f for f in os.listdir("/dev/shm")
+                if f.startswith("repro-cache-")}
+    except FileNotFoundError:  # pragma: no cover - non-Linux shm
+        return set()
+
+
+def test_log_roundtrip_exact():
+    """Entries fold back out of the segment bit-for-bit: same keys, same
+    float64 values, same table (terminal vs partial); re-folding at the
+    advanced cursor is a no-op."""
+    log = ShmCacheLog(capacity=4, width=4)
+    try:
+        term = {(1, 2, 3): 0.125, (4,): -7.5e-11}
+        part = {(1, 2): 3.0}
+        assert log.append((term, part, {}, {})) == 3
+        dst = TranspositionCache()
+        r = ShmCacheReader()
+        assert r.fold(dst, log.name, log.count) == 3
+        assert dst.terminal == term
+        assert dst.partial == part
+        assert r.fold(dst, log.name, log.count) == 0  # cursor advanced
+        assert r.folded == 3
+        r.close()
+    finally:
+        log.close()
+        log.unlink()
+    assert log.name not in _segments()
+
+
+def test_resize_swap_preserves_rows_and_cursors():
+    """Overflowing capacity or key width migrates to a new generation with
+    the row prefix copied — an attached reader follows the new NAME from
+    its OLD cursor and misses nothing; the superseded segment survives
+    until ``drain_retired()`` (an in-flight round message may still name
+    it), then unlinks."""
+    log = ShmCacheLog(capacity=2, width=2)
+    try:
+        g0 = log.name
+        log.append(({(1, 2): 1.0}, {}, {}, {}))
+        dst = TranspositionCache()
+        r = ShmCacheReader()
+        r.fold(dst, log.name, log.count)
+        # blow past BOTH capacity (2) and key width (2) in one append
+        burst = {tuple(range(i, i + 5)): float(i) for i in range(10, 16)}
+        log.append((burst, {}, {}, {}))
+        assert log.gen == 1 and log.name != g0
+        assert log.capacity >= 7 and log.width >= 5
+        r.fold(dst, log.name, log.count)
+        assert dst.terminal == {(1, 2): 1.0, **burst}
+        assert g0 in _segments()  # retired, not yet unlinked
+        log.drain_retired()
+        assert g0 not in _segments()
+        r.close()
+    finally:
+        log.close()
+        log.unlink()
+    assert log.name not in _segments()
+
+
+def test_learned_tagged_entries_rejected():
+    """The log is exact-only: an export carrying learned version tags must
+    be refused so callers fall back to the pickled-export protocol."""
+    log = ShmCacheLog()
+    try:
+        with pytest.raises(ValueError):
+            log.append(({(1,): 1.0}, {}, {(1,): 3}, {}))
+    finally:
+        log.close()
+        log.unlink()
+
+
+def test_two_logs_one_process_distinct_segments():
+    """Segment names are namespaced per pool instance (pid + sequence), so
+    two logs in one process write disjoint segments."""
+    a, b = ShmCacheLog(), ShmCacheLog()
+    try:
+        assert a.name != b.name
+        a.append(({(1,): 1.0}, {}, {}, {}))
+        b.append(({(2,): 2.0}, {}, {}, {}))
+        ca, cb = TranspositionCache(), TranspositionCache()
+        ra, rb = ShmCacheReader(), ShmCacheReader()
+        ra.fold(ca, a.name, a.count)
+        rb.fold(cb, b.name, b.count)
+        assert ca.terminal == {(1,): 1.0}
+        assert cb.terminal == {(2,): 2.0}
+        ra.close()
+        rb.close()
+    finally:
+        for log in (a, b):
+            log.close()
+            log.unlink()
+
+
+def test_two_pools_one_process_no_collision():
+    """Two live pinned pools in one process run shm transport side by side
+    — distinct segments, correct (sequential-identical) results on both,
+    and zero /dev/shm residue after both shut down."""
+    from repro.core.autotuner import make_mdp
+    from repro.core.engine.workers import PinnedWorkerPool
+    from repro.core.ensemble import ProTuner
+    from repro.core.mcts import MCTSConfig
+
+    pre = _segments()
+    mc = MCTSConfig(iters_per_decision=4)
+    pools = [
+        PinnedWorkerPool([], CachedMDP(make_mdp(*TRAIN_CELL)), n_workers=2)
+        for _ in range(2)
+    ]
+    try:
+        results = []
+        for seed, pool in enumerate(pools):
+            tuner = ProTuner(CachedMDP(make_mdp(*TRAIN_CELL)), n_standard=2,
+                             n_greedy=1, mcts_config=mc, seed=seed,
+                             worker_pool=pool)
+            results.append(tuner.run())
+        names = {p._shm.name for p in pools if p._shm is not None}
+        assert len(names) == 2  # both ran shm transport, disjoint segments
+        for seed, res in enumerate(results):
+            assert res.stats.get("shm") is True
+            ref = ProTuner(CachedMDP(make_mdp(*TRAIN_CELL)), n_standard=2,
+                           n_greedy=1, mcts_config=mc, seed=seed).run()
+            assert res.plan == ref.plan and res.cost == ref.cost
+            assert [d["action"] for d in res.decisions] == [
+                d["action"] for d in ref.decisions]
+    finally:
+        for p in pools:
+            p.shutdown()
+    assert not (_segments() - pre)
+
+
+def test_pool_stats_serving_split():
+    """The pool's per-worker counters surface on ``TuneResult.stats``: in
+    shm mode entries arrive via the fold (``shm_entries``), the export
+    counter stays zero, and hit/miss/dedup counters are populated; forcing
+    ``shm=False`` flips the split to ``export_entries``."""
+    from repro.core.autotuner import make_mdp
+    from repro.core.ensemble import ProTuner
+    from repro.core.mcts import MCTSConfig
+
+    def run(**kw):
+        return ProTuner(
+            CachedMDP(make_mdp(*TRAIN_CELL)), n_standard=2, n_greedy=1,
+            mcts_config=MCTSConfig(iters_per_decision=8), seed=5,
+            parallel=True, n_workers=2, **kw,
+        ).run()
+
+    shm = run(shm=True)
+    assert shm.stats["shm"] is True
+    workers = shm.stats["workers"]
+    assert len(workers) == 2
+    assert sum(w.get("shm_entries", 0) for w in workers) > 0
+    assert sum(w.get("export_entries", 0) for w in workers) == 0
+    assert sum(w.get("hits", 0) + w.get("misses", 0) for w in workers) > 0
+    assert len(shm.stats["dup_evals_rounds"]) > 0
+
+    exp = run(shm=False)
+    assert exp.stats["shm"] is False
+    assert sum(w.get("shm_entries", 0) for w in exp.stats["workers"]) == 0
+    assert sum(
+        w.get("export_entries", 0) for w in exp.stats["workers"]) > 0
+    # transports are interchangeable: same plan either way
+    assert shm.plan == exp.plan and shm.cost == exp.cost

@@ -9,16 +9,32 @@ Headline metrics for the daemon (ISSUE-7 acceptance):
 * cold-path bit-identity — the daemon's cold plan/cost/decisions equal
   one-shot ``autotune()`` on the same cell/seed.
 
-Two front ends over one scenario:
+Three front ends:
 
     PYTHONPATH=src python -m benchmarks.tuner_service            # artifact
     PYTHONPATH=src python -m benchmarks.tuner_service --check    # CI gate
+    PYTHONPATH=src python -m benchmarks.tuner_service --faults   # CI gate
 
 ``--check`` additionally restarts the service on the SAME store (fresh
 process state, persistent disk state) and asserts every request is a
 store hit with zero searches, then round-trips one request through the
 actual socket daemon (subprocess) — exit 0 = pass, 1 = fail.  Everything
 is analytic/XLA-free, so the gate is seconds.
+
+``--faults`` is the crash-safety gate (ISSUE-10): three deterministic
+fault scenarios with EXACT expected counters and zero lost requests —
+
+1. crash_resume — SIGKILL the subprocess daemon mid-search (slowed by
+   the fault-injection round delay); exactly 1 write-ahead journal entry
+   survives, 0 plans; the restarted daemon replays the journal from the
+   round-boundary checkpoint and answers the repeat request from the
+   store, bit-identical to one-shot ``autotune()``.
+2. deadline_resume — a deadlined request returns best-so-far with
+   ``interrupted`` provenance (nothing recorded, checkpoint kept); the
+   retry resumes and lands the full bit-identical result.
+3. overload — bounded queue of 1 under 4 concurrent requests: exactly
+   2 structured ``overloaded`` rejections with retry hints, 2 served,
+   graceful drain on shutdown.
 """
 from __future__ import annotations
 
@@ -127,14 +143,241 @@ def check_socket_roundtrip(store_dir: str) -> dict:
     return out
 
 
+def _spawn_daemon(store_dir: str, sock: str, *extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.tune_serve", "serve",
+         "--store", store_dir, "--socket", sock, *extra],
+        env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+    )
+
+
+def _wait_for(pred, timeout_s=60.0, interval=0.05):
+    deadline = time.time() + timeout_s
+    while time.time() < deadline:
+        if pred():
+            return True
+        time.sleep(interval)
+    return False
+
+
+def fault_crash_resume(tmp: str, ref) -> dict:
+    """SIGKILL mid-search; journal + checkpoint survive; the restarted
+    daemon recovers and serves the complete, bit-identical result."""
+    import signal
+    import threading
+
+    from repro.launch.tune_serve import TuneClient
+
+    store = os.path.join(tmp, "crash-store")
+    sock = os.path.join(tmp, "crash.sock")
+    arch, shape = CELLS[0]
+    ckpt_dir = os.path.join(store, "checkpoints")
+    journal_dir = os.path.join(store, "journal")
+
+    proc = _spawn_daemon(store, sock,
+                         "--checkpoint-every", "1", "--round-delay", "0.15")
+    try:
+        assert _wait_for(lambda: os.path.exists(sock)), "daemon never bound"
+
+        def fire():
+            try:
+                TuneClient(sock).tune(arch, shape, algo=ALGO, seed=SEEDS[0],
+                                      n_standard=N_STANDARD, n_greedy=N_GREEDY)
+            except Exception:
+                pass  # the daemon dies mid-request by design
+
+        t = threading.Thread(target=fire, daemon=True)
+        t.start()
+        assert _wait_for(
+            lambda: os.path.isdir(ckpt_dir) and os.listdir(ckpt_dir),
+            interval=0.02,
+        ), "no checkpoint appeared mid-search"
+        proc.send_signal(signal.SIGKILL)
+        proc.wait(timeout=10)
+        t.join(timeout=10)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+    # exact post-crash state: 1 pending journal entry, 0 landed plans
+    pending_after_kill = len(os.listdir(journal_dir))
+    plans_after_kill = len(os.listdir(os.path.join(store, "plans")))
+    assert pending_after_kill == 1, pending_after_kill
+    assert plans_after_kill == 0, plans_after_kill
+
+    os.remove(sock)  # the SIGKILLed daemon left a stale socket file
+    proc = _spawn_daemon(store, sock, "--checkpoint-every", "1",
+                         "--round-delay", "0.15", "--max-requests", "1")
+    try:
+        assert _wait_for(lambda: os.path.exists(sock)), "restart never bound"
+        out = TuneClient(sock, timeout=120.0).tune(
+            arch, shape, algo=ALGO, seed=SEEDS[0],
+            n_standard=N_STANDARD, n_greedy=N_GREEDY)
+        proc.wait(timeout=30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=10)
+
+    assert out["ok"] and out["served"] == "store", out
+    # the socket hop JSON-serializes the plan (tuples -> lists); compare
+    # through the same round-trip
+    assert out["result"]["plan"] == json.loads(json.dumps(ref.plan.to_dict()))
+    assert out["result"]["cost"] == ref.cost
+    assert out["result"]["decisions"] == ref.decisions
+    assert os.listdir(journal_dir) == []   # recovery released the journal
+    assert os.listdir(ckpt_dir) == []      # ... and cleared the checkpoint
+    return {
+        "pending_journal_after_kill": pending_after_kill,
+        "plans_after_kill": plans_after_kill,
+        "recovered_served": out["served"],
+        "bit_identical": True,
+        "lost_requests": 0,
+    }
+
+
+def fault_deadline_resume(tmp: str, ref) -> dict:
+    """Deadline interrupt returns best-so-far + provenance; the retry
+    resumes from the kept checkpoint and lands the full result."""
+    from repro.service.daemon import TunerService
+    from repro.service.store import canonical_request
+
+    arch, shape = CELLS[0]
+    req = dict(arch=arch, shape=shape, algo=ALGO, seed=SEEDS[0],
+               n_standard=N_STANDARD, n_greedy=N_GREEDY)
+    svc = TunerService(os.path.join(tmp, "deadline-store"),
+                       checkpoint_every=1, round_delay_s=0.05,
+                       log=lambda *a: None)
+    key = canonical_request(**req)
+    cut = svc.handle(dict(req, deadline_s=0.12))
+    assert cut["ok"] and cut["served"] == "search", cut
+    info = cut["result"]["stats"]["interrupted"]
+    assert info["reason"] == "deadline", info
+    assert 0 < info["rounds_done"] < info["rounds_total"], info
+    assert svc.store.lookup(key) is None          # partial never recorded
+    assert svc.store.load_checkpoint(key) is not None
+    assert svc.store.pending_requests() == []     # client got its answer
+
+    out = svc.handle(dict(req))                   # resumes and completes
+    assert out["ok"] and "interrupted" not in out["result"]["stats"]
+    assert out["result"]["plan"] == ref.plan.to_dict()
+    assert out["result"]["cost"] == ref.cost
+    assert out["result"]["decisions"] == ref.decisions
+    assert svc.store.load_checkpoint(key) is None
+    counters = {
+        "n_searches": svc.n_searches,
+        "n_interrupted": svc.n_interrupted,
+        "rounds_done_at_deadline": info["rounds_done"],
+        "bit_identical": True,
+        "lost_requests": 0,
+    }
+    assert counters["n_searches"] == 2 and counters["n_interrupted"] == 1
+    svc.shutdown()
+    return counters
+
+
+def fault_overload(tmp: str) -> dict:
+    """Bounded queue of 1 under 4 concurrent requests: exactly 2
+    structured rejections, 2 served, graceful shutdown."""
+    import threading
+
+    from repro.launch.tune_serve import TuneClient
+    from repro.service.daemon import TunerService, serve_forever
+
+    arch, shape = CELLS[0]
+    svc = TunerService(os.path.join(tmp, "overload-store"),
+                       round_delay_s=0.08, log=lambda *a: None)
+    sock = os.path.join(tmp, "overload.sock")
+    server = threading.Thread(
+        target=serve_forever, args=(svc, sock),
+        kwargs=dict(queue_size=1), daemon=True)
+    server.start()
+    assert _wait_for(lambda: os.path.exists(sock)), "server never bound"
+    client = TuneClient(sock)
+    results = {}
+
+    def submit(name):
+        results[name] = client.tune(arch, shape, algo=ALGO, seed=SEEDS[0],
+                                    n_standard=N_STANDARD, n_greedy=N_GREEDY)
+
+    t1 = threading.Thread(target=submit, args=("inflight",), daemon=True)
+    t1.start()
+    assert _wait_for(lambda: svc.n_requests >= 1)   # search is IN handle
+    t2 = threading.Thread(target=submit, args=("queued",), daemon=True)
+    t2.start()
+    assert _wait_for(
+        lambda: client.stats()["stats"]["serve"]["queue_depth"] >= 1)
+    overloaded = []
+    for _ in range(2):
+        out = client.tune(arch, shape, algo=ALGO, seed=SEEDS[0],
+                          n_standard=N_STANDARD, n_greedy=N_GREEDY)
+        assert not out["ok"] and out["error"] == "overloaded", out
+        assert out["retry_after_s"] > 0, out
+        overloaded.append(out)
+    t1.join(timeout=30)
+    t2.join(timeout=30)
+    assert results["inflight"]["ok"] and results["queued"]["ok"]
+    assert results["inflight"]["served"] == "search"
+    assert results["queued"]["served"] == "store"
+    st = client.stats()["stats"]["serve"]
+    counters = {
+        "served": st["served"],
+        "n_overloaded": st["n_overloaded"],
+        "retry_after_s": [o["retry_after_s"] for o in overloaded],
+        "lost_requests": 0,
+    }
+    assert counters["served"] == 2 and counters["n_overloaded"] == 2
+    out = client.shutdown()
+    assert out["ok"]
+    server.join(timeout=10)
+    assert not server.is_alive(), "server did not drain on shutdown"
+    return counters
+
+
+def run_faults(outdir: str) -> int:
+    """The --faults CI gate: all three scenarios, exact counters."""
+    from repro.core.autotuner import autotune
+
+    arch, shape = CELLS[0]
+    ref = autotune(arch, shape, algo=ALGO, seed=SEEDS[0],
+                   n_standard=N_STANDARD, n_greedy=N_GREEDY)
+    tmp = tempfile.mkdtemp(prefix="tuner-faults-")
+    try:
+        summary = {
+            "crash_resume": fault_crash_resume(tmp, ref),
+            "deadline_resume": fault_deadline_resume(tmp, ref),
+            "overload": fault_overload(tmp),
+        }
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    lost = sum(s["lost_requests"] for s in summary.values())
+    assert lost == 0, summary
+    for name, s in summary.items():
+        print(f"[tuner_service --faults] {name}: "
+              + ", ".join(f"{k}={v}" for k, v in s.items()))
+    emit([{"engine": ENGINE_STAMP, "summary": summary}],
+         "tuner_service_faults", outdir=outdir)
+    print("[tuner_service] faults gate OK (zero lost requests)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--check", action="store_true",
                     help="assert the serve-gate criteria (CI)")
+    ap.add_argument("--faults", action="store_true",
+                    help="run the deterministic fault-injection gate "
+                         "(crash/deadline/overload) instead of the "
+                         "serving benchmark")
     ap.add_argument("--store", default=None,
                     help="persistent store dir (default: tmp, wiped)")
     ap.add_argument("--outdir", default="experiments/bench")
     args = ap.parse_args(argv)
+
+    if args.faults:
+        return run_faults(args.outdir)
 
     from repro.core.autotuner import autotune
     from repro.service.daemon import TunerService

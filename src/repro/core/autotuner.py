@@ -126,6 +126,8 @@ def autotune(
     worker_batch: Optional[bool] = None,
     plan_store=None,
     pricing: Optional[str] = None,
+    controller=None,
+    resume: Optional[dict] = None,
 ) -> TuneResult:
     """Tune one (arch × shape × mesh) cell.
 
@@ -162,7 +164,16 @@ def autotune(
     workers instead of blocking the search loop on serial subprocess
     compiles, and a failed measurement degrades that candidate to its
     exact analytic cost (counted on ``TuneResult.n_measure_failures``)
-    instead of aborting the run."""
+    instead of aborting the run.
+
+    ``controller`` mounts a round-boundary ``RunController``
+    (``repro.core.run_control``): a deadline or cancel finishes the
+    current decision round and returns best-so-far with
+    ``TuneResult.stats["interrupted"]`` provenance; ``resume`` restores a
+    ``ProTuner.snapshot()`` checkpoint so the run replays the remaining
+    rounds bit-identically.  An uninterrupted run with a controller
+    mounted is bit-identical to one without.  An interrupted (partial)
+    result is never recorded into ``plan_store``."""
     assert engine in ENGINES, engine
     store_req = None
     if plan_store is not None:
@@ -211,6 +222,8 @@ def autotune(
         shm=shm,
         worker_batch=worker_batch,
         seed_plans=seed_plans,
+        controller=controller,
+        resume=resume,
     )
     if plan_store is not None:
         plan_store.record(store_req, res)

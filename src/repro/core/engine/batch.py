@@ -271,14 +271,23 @@ class _TreeCursor:
 
 
 def run_decision_batch(
-    trees: List[ArrayMCTS], mdp=None
+    trees: List[ArrayMCTS], mdp=None, controller=None
 ) -> List[DecisionResult]:
     """One lockstep decision round over ``trees`` — the batched equivalent
     of ``[t.run_decision() for t in trees]``, with identical results.
 
     Requires an iteration budget (wall-clock budgets are inherently
     per-tree and fall back to scalar ``run_decision``).  All trees must
-    share the per-decision budget, as ProTuner ensembles do."""
+    share the per-decision budget, as ProTuner ensembles do.
+
+    ``controller`` (core/run_control.py) is the mid-round cancellation
+    seam: once ``controller.cancel()`` fires, the remaining iterations of
+    THIS round are skipped (after at least one, so every root has a
+    child) and the round's decisions are computed from the simulations
+    done so far.  Deadlines never truncate — ``abort_round`` only answers
+    to an explicit cancel — so an uninterrupted (or merely
+    deadline-bounded) round runs all its iterations and stays
+    bit-identical to a controller-free one."""
     if not trees:
         return []
     if mdp is None:
@@ -288,7 +297,9 @@ def run_decision_batch(
         return [t.run_decision() for t in trees]
     iters = cfg.iters_per_decision or 1
     cursors = [_TreeCursor(t) for t in trees]
-    for _ in range(iters):
+    for it in range(iters):
+        if controller is not None and it and controller.abort_round():
+            break
         pending = [c.advance_to_leaf() for c in cursors]
         t0 = time.perf_counter()
         costs = _terminal_cost_batch(mdp, [leaf for _, leaf in pending])

@@ -288,6 +288,10 @@ class PinnedWorkerPool:
         self.submit_bytes_rounds: List[int] = []
         self.return_bytes_rounds: List[int] = []
         self.n_worker_restarts = 0
+        # restarts attributable to the CURRENT binding (reset by rebind():
+        # the daemon's health watchdog reads this to tell "one bad run"
+        # from "the pool is repeatedly dying")
+        self.restarts_since_rebind = 0
         self.extra_evals = 0  # worker-side cost-model evals (per-round diffs)
         # cross-worker duplicate evals: per round, the number of (state,
         # table) keys that TWO OR MORE workers priced independently —
@@ -372,6 +376,7 @@ class PinnedWorkerPool:
         worker's lost pre-round state (same pickled RNG), so re-running
         the round reproduces the lost results bit-for-bit."""
         self.n_worker_restarts += 1
+        self.restarts_since_rebind += 1
         try:
             w.conn.close()
         except OSError:
@@ -420,6 +425,8 @@ class PinnedWorkerPool:
             self._shm_wm = mdp.cache.watermark()
             self.shm_used = True
         # per-run counters restart with the new run's trees
+        # (n_worker_restarts stays cumulative over the pool's lifetime)
+        self.restarts_since_rebind = 0
         self.dup_evals = 0
         self.dup_evals_rounds = []
         self.submit_bytes_rounds = []
@@ -661,6 +668,8 @@ class PinnedWorkerPool:
         return {
             "shm": self.shm_used,
             "worker_batch": self.worker_batch,
+            "n_worker_restarts": self.n_worker_restarts,
+            "restarts_since_rebind": self.restarts_since_rebind,
             "dup_evals": self.dup_evals,
             "dup_evals_rounds": list(self.dup_evals_rounds),
             "workers": [dict(w.stats) for w in self._workers],

@@ -72,6 +72,11 @@ from repro.core.space import SchedulePlan
 
 INF = float("inf")
 
+# ProTuner.snapshot() schema version (round-boundary checkpoints; bump on
+# any change to the snapshot dict's shape so stale checkpoints are ignored
+# instead of mis-restored)
+SNAPSHOT_VERSION = 1
+
 logger = logging.getLogger(__name__)
 
 
@@ -157,6 +162,8 @@ class ProTuner:
         worker_pool: Optional[PinnedWorkerPool] = None,
         shm: Optional[bool] = None,
         worker_batch: Optional[bool] = None,
+        controller=None,
+        resume: Optional[dict] = None,
     ):
         # parallel-transport levers (engine/workers.py): ``shm`` backs the
         # forward cache delta with a shared-memory log (None = auto: on
@@ -243,6 +250,65 @@ class ProTuner:
         # master counter (uncached trees keep private mdp copies whose
         # counters accumulate across rounds)
         self._sent_evals: Optional[List[int]] = None
+        # round-boundary run control (core/run_control.py): deadline /
+        # cancel / checkpoint hooks.  ``decisions`` lives on the instance
+        # so snapshot()/restore round-trip the full decision trace.
+        self.controller = controller
+        self.decisions: List[dict] = []
+        if resume is not None:
+            self._restore(resume)
+
+    # -- round-boundary checkpointing (core/run_control.py) ------------
+    def snapshot(self) -> dict:
+        """Everything a fresh ``ProTuner`` (built from the same request)
+        needs to replay the remaining rounds bit-identically: the live
+        trees (each carries its own ``random.Random`` and stat arrays; in
+        parallel mode the MASTER trees are canonical, reverse deltas land
+        every round), the decision trace, and the measurement memo.  The
+        caller pickles the dict — the trees' shared ``mdp`` (and cache)
+        dedups inside one ``dumps``.  Learned-cost runs are not
+        snapshot-eligible (trainer state is not restorable); the run loop
+        passes no thunk for them."""
+        return {
+            "version": SNAPSHOT_VERSION,
+            "engine": self.engine,
+            "round": len(self.decisions),
+            "decisions": list(self.decisions),
+            "trees": self.trees,
+            "measure_cache": dict(self._measure_cache),
+            "measure_failed": set(self._measure_failed),
+            "n_measurements": self.n_measurements,
+            "n_measure_failures": self.n_measure_failures,
+        }
+
+    def _restore(self, snap: dict) -> None:
+        """Adopt a ``snapshot()`` (typically pickle-round-tripped through
+        the plan store's checkpoint tier).  A snapshot that doesn't match
+        this run's shape is ignored — the run starts fresh, which is
+        always correct, just slower."""
+        trees = snap.get("trees") if isinstance(snap, dict) else None
+        if (
+            not isinstance(snap, dict)
+            or snap.get("version") != SNAPSHOT_VERSION
+            or not trees
+            or len(trees) != len(self.trees)
+            or snap.get("engine") != self.engine
+        ):
+            logger.warning("checkpoint does not match this run; starting fresh")
+            return
+        old_mdp = trees[0].mdp
+        if isinstance(old_mdp, CachedMDP) and isinstance(self.mdp, CachedMDP):
+            # warm entries priced before the interrupt survive it; a pure
+            # memo of exact values never changes plan/cost/decisions
+            self.mdp.cache.merge(old_mdp.cache)
+        for t in trees:
+            t.mdp = self.mdp  # reattach this run's (shared) mdp + cache
+        self.trees = trees
+        self.decisions = list(snap["decisions"])
+        self._measure_cache = dict(snap["measure_cache"])
+        self._measure_failed = set(snap["measure_failed"])
+        self.n_measurements = snap["n_measurements"]
+        self.n_measure_failures = snap["n_measure_failures"]
 
     # ------------------------------------------------------------------
     def _exact_cost(self, state: State) -> float:
@@ -306,7 +372,8 @@ class ProTuner:
             # lockstep pending-leaf round: the K trees' concurrent
             # simulations price through ONE terminal_cost_batch call per
             # step — results identical to the per-tree loop (engine/batch)
-            return run_decision_batch(self.trees, self.mdp)
+            return run_decision_batch(self.trees, self.mdp,
+                                      controller=self.controller)
         return [t.run_decision() for t in self.trees]
 
     def _round_pinned(self):
@@ -370,7 +437,15 @@ class ProTuner:
 
     def run(self, time_budget_s: Optional[float] = None) -> TuneResult:
         t0 = time.perf_counter()
-        decisions: List[dict] = []
+        decisions = self.decisions  # non-empty on a checkpoint resume
+        controller = self.controller
+        # checkpoint eligibility: learned-cost serving carries trainer
+        # state (fit generations, model params) that a snapshot can't
+        # restore bit-identically — those runs keep deadline/cancel
+        # support but never checkpoint (a replay restarts from scratch,
+        # which is deterministic and therefore still correct)
+        snapshot_thunk = self.snapshot if self.cost_backend is None else None
+        interrupted: Optional[dict] = None
         executor: Optional[ProcessPoolExecutor] = None
         try:
             if self.parallel:
@@ -402,6 +477,8 @@ class ProTuner:
             while not self.trees[0].done:
                 if time_budget_s and time.perf_counter() - t0 > time_budget_s:
                     break
+                if controller is not None:
+                    controller.begin_round()
                 if self._pool is not None:
                     results = self._round_pinned()
                 elif executor is not None:
@@ -446,6 +523,31 @@ class ProTuner:
                 # pinned workers are one advance behind the master's
                 # canonical trees until the next round's forward delta
                 self._pending_advance = win.action
+
+                if controller is not None:
+                    # a cancel can truncate the round mid-iteration
+                    # (engine/batch.py); a truncated boundary is NOT
+                    # canonical, so it is neither counted, delayed, nor
+                    # checkpointed — the last cadence checkpoint (all full
+                    # rounds) stays the resume point
+                    truncated = controller.round_truncated
+                    if not truncated:
+                        controller.round_done(snapshot_thunk)
+                    reason = controller.should_stop()
+                    if reason is not None and not self.trees[0].done:
+                        ckpt = False
+                        if not truncated:
+                            # final boundary checkpoint (idempotent with a
+                            # cadence checkpoint on the same round)
+                            ckpt = controller.checkpoint(snapshot_thunk)
+                        interrupted = {
+                            "reason": reason,
+                            "rounds_done": len(decisions),
+                            "rounds_total": len(self.mdp.space.stages),
+                            "round_truncated": truncated,
+                            "checkpointed": bool(ckpt),
+                        }
+                        break
         finally:
             if self._pool is not None and self._pool is not self._ext_pool:
                 self._pool.shutdown()
@@ -479,6 +581,12 @@ class ProTuner:
         n_evals = getattr(self.mdp.cost_model, "n_evals", 0) + self._extra_evals
         serving = self.cost_backend.stats() if self.cost_backend else None
         pool = self._pool
+        stats = pool.stats() if pool else {}
+        if interrupted is not None:
+            # best-so-far provenance: callers (the daemon, the plan store)
+            # must treat this result as partial — never record it as THE
+            # answer for the request
+            stats["interrupted"] = interrupted
         return TuneResult(
             plan=self.mdp.plan(final_state),
             cost=final_cost,
@@ -501,7 +609,7 @@ class ProTuner:
             submit_bytes_rounds=list(pool.submit_bytes_rounds) if pool else [],
             return_bytes_rounds=list(pool.return_bytes_rounds) if pool else [],
             n_worker_restarts=pool.n_worker_restarts if pool else 0,
-            stats=pool.stats() if pool else {},
+            stats=stats,
             n_measure_failures=self.n_measure_failures,
         )
 
@@ -535,6 +643,8 @@ class MCTSEnsembleBackend:
         worker_pool=None,
         shm: Optional[bool] = None,
         worker_batch: Optional[bool] = None,
+        controller=None,
+        resume: Optional[dict] = None,
         **_,
     ) -> TuneResult:
         mc = dataclasses.replace(self.config, seed=seed)
@@ -559,6 +669,8 @@ class MCTSEnsembleBackend:
             worker_pool=worker_pool,
             shm=shm,
             worker_batch=worker_batch,
+            controller=controller,
+            resume=resume,
         )
         res = tuner.run(time_budget_s=time_budget_s)
         res.algo = self.algo

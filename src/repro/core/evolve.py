@@ -181,6 +181,7 @@ class EvolutionarySearchBackend:
         cache: Optional[bool] = None,
         max_evals: Optional[int] = None,
         seed_plans: Optional[Sequence[SchedulePlan]] = None,
+        controller=None,
         **_,
     ) -> TuneResult:
         t0 = time.perf_counter()
@@ -219,6 +220,7 @@ class EvolutionarySearchBackend:
         best_state: Optional[State] = None
         best_cost = float("inf")
         decisions: List[dict] = []
+        interrupted = None
         g = 0
         while True:
             costs = mdp.terminal_cost_batch(pop)
@@ -241,6 +243,23 @@ class EvolutionarySearchBackend:
                 break
             if max_evals is not None and evals() - evals0 >= max_evals:
                 break
+            if controller is not None:
+                # generation boundary = this backend's round boundary
+                # (core/run_control.py): a deadline/cancel finishes the
+                # generation and returns best-so-far.  No checkpoints —
+                # an evolve replay from scratch is deterministic and
+                # cheap, so resume-from-checkpoint buys nothing here.
+                controller.begin_round()
+                controller.round_done()
+                reason = controller.should_stop()
+                if reason is not None:
+                    interrupted = {
+                        "reason": reason,
+                        "rounds_done": g,
+                        "rounds_total": self.generations,
+                        "checkpointed": False,
+                    }
+                    break
             # ---- next generation: elites + tournament offspring ----
             ranked = sorted(range(len(pop)), key=lambda i: (costs[i], pop[i]))
             nxt = [pop[i] for i in ranked[: self.elite]]
@@ -277,6 +296,8 @@ class EvolutionarySearchBackend:
         if isinstance(mdp, CachedMDP):
             res.cache_hits = mdp.cache.hits
             res.cache_misses = mdp.cache.misses
+        if interrupted is not None:
+            res.stats["interrupted"] = interrupted
         return res
 
 

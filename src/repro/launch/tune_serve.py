@@ -69,6 +69,25 @@ def main(argv=None) -> int:
                          "(stub = deterministic XLA-free target)")
     sv.add_argument("--max-requests", type=int, default=None,
                     help="exit after N tune requests (tests/CI smoke)")
+    sv.add_argument("--read-timeout", type=float, default=30.0,
+                    help="per-connection socket read timeout in seconds "
+                         "(a silent client is closed, not waited on)")
+    sv.add_argument("--queue-size", type=int, default=16,
+                    help="bounded tune-request queue; a full queue answers "
+                         "'overloaded' with a retry_after_s hint")
+    sv.add_argument("--checkpoint-every", type=int, default=4,
+                    help="persist a resumable search checkpoint every K "
+                         "decision rounds (0 disables crash resume)")
+    sv.add_argument("--deadline-s", type=float, default=None,
+                    help="default per-request search deadline; requests "
+                         "override with their own deadline_s")
+    sv.add_argument("--degrade-after", type=int, default=5,
+                    help="cumulative pool worker restarts before the "
+                         "watchdog degrades to the sequential engine")
+    sv.add_argument("--round-delay", type=float, default=0.0,
+                    help=argparse.SUPPRESS)  # fault-injection: slow rounds
+    sv.add_argument("--no-recover", action="store_true",
+                    help="skip write-ahead-journal replay on startup")
 
     def add_request_args(p):
         p.add_argument("--socket", required=True)
@@ -83,6 +102,12 @@ def main(argv=None) -> int:
         p.add_argument("--noise-sigma", type=float, default=0.0)
         p.add_argument("--cost", default="analytic",
                        choices=["analytic", "learned", "hybrid"])
+        p.add_argument("--deadline-s", type=float, default=None,
+                       help="interrupt the search at the next round "
+                            "boundary after this many seconds; the "
+                            "response is best-so-far with interrupted "
+                            "provenance, and a repeat request resumes "
+                            "from the checkpoint")
 
     tn = sub.add_parser("tune", help="submit one tuning request")
     add_request_args(tn)
@@ -100,9 +125,16 @@ def main(argv=None) -> int:
         service = TunerService(
             args.store, parallel=args.parallel, n_workers=args.workers,
             measure=args.measure,
+            checkpoint_every=args.checkpoint_every,
+            deadline_s=args.deadline_s,
+            round_delay_s=args.round_delay,
+            degrade_after=args.degrade_after,
         )
         served = serve_forever(service, args.socket,
-                               max_requests=args.max_requests)
+                               max_requests=args.max_requests,
+                               read_timeout_s=args.read_timeout,
+                               queue_size=args.queue_size,
+                               recover=not args.no_recover)
         print(f"[tune_serve] served {served} request(s)")
         return 0
 
@@ -112,12 +144,15 @@ def main(argv=None) -> int:
     elif args.cmd == "shutdown":
         out = client.shutdown()
     else:
-        out = client.tune(
-            args.arch, args.shape, algo=args.algo, mesh=args.mesh,
+        settings = dict(
+            algo=args.algo, mesh=args.mesh,
             seed=args.seed, time_budget_s=args.budget_s,
             n_standard=args.n_standard, n_greedy=args.n_greedy,
             noise_sigma=args.noise_sigma, cost=args.cost,
         )
+        if args.deadline_s is not None:
+            settings["deadline_s"] = args.deadline_s
+        out = client.tune(args.arch, args.shape, **settings)
     print(json.dumps(out, indent=1, default=str))
     return 0 if out.get("ok") else 1
 

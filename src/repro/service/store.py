@@ -25,6 +25,14 @@ the ``os.replace`` and the loser's delta simply lands on its next sync
 (its in-memory cache still holds everything); exact-wins makes the merge
 order-independent for exact entries, so the store converges.
 
+Two further tiers back the daemon's crash safety (PR 10):
+``journal/<request-key>.json`` — the write-ahead request log (journaled
+before search, released after the result lands; pending entries are what
+``TunerService.recover`` replays after a crash) — and
+``checkpoints/<request-key>.pkl`` — pickled round-boundary
+``ProTuner.snapshot()`` states, published with the same tmp-sibling +
+``os.replace`` discipline and quarantined on unreadable load.
+
 Warm starts load only EXACT (untagged) entries by default: a memo of
 exact analytic costs changes hit counts but never values, so a warmed
 search's plan/cost/decisions stay bit-identical to a cold one.  Learned-
@@ -38,8 +46,9 @@ import dataclasses
 import hashlib
 import json
 import os
+import pickle
 import uuid
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 from repro.core.engine.cache import TranspositionCache, Watermark
 from repro.core.ensemble import TuneResult
@@ -196,8 +205,14 @@ class PlanStore:
         self.root = root
         self.plans_dir = os.path.join(root, "plans")
         self.cells_dir = os.path.join(root, "cells")
+        # crash-safety tiers (service/daemon.py): the write-ahead request
+        # journal and the round-boundary search checkpoints
+        self.journal_dir = os.path.join(root, "journal")
+        self.checkpoints_dir = os.path.join(root, "checkpoints")
         os.makedirs(self.plans_dir, exist_ok=True)
         os.makedirs(self.cells_dir, exist_ok=True)
+        os.makedirs(self.journal_dir, exist_ok=True)
+        os.makedirs(self.checkpoints_dir, exist_ok=True)
         self.hits = 0
         self.misses = 0
 
@@ -258,6 +273,12 @@ class PlanStore:
     def record(self, req: dict, res: TuneResult) -> None:
         if res.plan is None:
             return  # an aborted run is not knowledge worth persisting
+        if (res.stats or {}).get("interrupted"):
+            # a deadline/cancel best-so-far is a PARTIAL answer — recording
+            # it would serve it to every future request for this key; the
+            # round-boundary checkpoint (not the plan tier) carries the
+            # interrupted run's progress
+            return
         _write_json(self._plan_path(req), {
             "version": STORE_VERSION,
             "request": req,
@@ -324,6 +345,126 @@ class PlanStore:
         })
         return new_wm
 
+    # -- journal tier (write-ahead request log) ------------------------
+    # A request is journaled BEFORE its search starts and released only
+    # after its result landed in the plan tier (or was answered on an
+    # error/interrupt path).  A daemon that died mid-search therefore
+    # leaves a pending entry behind; ``TunerService.recover`` replays
+    # those on restart, resuming from the checkpoint tier.
+    def _journal_path(self, req: dict) -> str:
+        return os.path.join(self.journal_dir, request_key(req) + ".json")
+
+    def journal_begin(self, req: dict) -> None:
+        _write_json(self._journal_path(req), {
+            "version": STORE_VERSION,
+            "request": req,
+            "state": "pending",
+        })
+
+    def journal_release(self, req: dict) -> None:
+        try:
+            os.remove(self._journal_path(req))
+        except OSError:
+            pass
+
+    def pending_requests(self) -> List[dict]:
+        """Validated scan of the journal, sorted by filename (so replay
+        order is deterministic); corrupt entries quarantine like every
+        other tier."""
+        out = []
+        for fname in sorted(os.listdir(self.journal_dir)):
+            if not fname.endswith(".json"):
+                continue
+            obj = _load_json(
+                os.path.join(self.journal_dir, fname),
+                lambda o: isinstance(o["request"], dict)
+                and o["state"] == "pending",
+            )
+            if obj is not None:
+                out.append(obj["request"])
+        return out
+
+    def sweep_tmp(self) -> int:
+        """Remove tmp-sibling debris left by writers that died mid-write
+        (a SIGKILL between ``open(tmp)`` and ``os.replace`` orphans the
+        tmp file forever — the atomic publish means the TIER is clean,
+        but the directory isn't).  Tmp names embed the writer's pid, so
+        a file whose writer is still alive (another daemon sharing this
+        store, mid-publish right now) is left alone.  Called from the
+        daemon's crash ``recover()``; returns the number removed."""
+        n = 0
+        for d in (self.plans_dir, self.cells_dir, self.journal_dir,
+                  self.checkpoints_dir):
+            for fname in os.listdir(d):
+                parts = fname.rsplit(".tmp.", 1)
+                if len(parts) != 2:
+                    continue
+                pid = parts[1].split(".", 1)[0]
+                try:
+                    os.kill(int(pid), 0)
+                    continue  # writer still alive: in-flight publish
+                except ValueError:
+                    pass  # malformed pid: debris
+                except ProcessLookupError:
+                    pass  # writer is gone: debris
+                except PermissionError:
+                    continue  # pid exists under another uid: leave it
+                try:
+                    os.remove(os.path.join(d, fname))
+                    n += 1
+                except OSError:
+                    pass
+        return n
+
+    # -- checkpoint tier (round-boundary search snapshots) -------------
+    # Pickle, not JSON: a ``ProTuner.snapshot()`` carries live tree
+    # objects (numpy stat arrays, ``random.Random`` state).  Same publish
+    # discipline as every tier: tmp-sibling + ``os.replace``, so a
+    # SIGKILL mid-write can never publish a torn file; unpicklable or
+    # schema-violating checkpoints are quarantined on read and the run
+    # simply starts fresh.
+    def _checkpoint_path(self, req: dict) -> str:
+        return os.path.join(self.checkpoints_dir, request_key(req) + ".pkl")
+
+    def save_checkpoint(self, req: dict, snap: dict) -> None:
+        path = self._checkpoint_path(req)
+        tmp = f"{path}.tmp.{os.getpid()}.{uuid.uuid4().hex[:8]}"
+        try:
+            with open(tmp, "wb") as f:
+                pickle.dump({
+                    "version": STORE_VERSION,
+                    "request": req,
+                    "snapshot": snap,
+                }, f)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+
+    def load_checkpoint(self, req: dict) -> Optional[dict]:
+        path = self._checkpoint_path(req)
+        try:
+            with open(path, "rb") as f:
+                obj = pickle.load(f)
+        except FileNotFoundError:
+            return None
+        except Exception:  # noqa: BLE001 - any unpickling failure quarantines
+            obj = None
+        if (isinstance(obj, dict) and obj.get("version") == STORE_VERSION
+                and isinstance(obj.get("snapshot"), dict)):
+            return obj["snapshot"]
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+        return None
+
+    def clear_checkpoint(self, req: dict) -> None:
+        try:
+            os.remove(self._checkpoint_path(req))
+        except OSError:
+            pass
+
     # -- stats ---------------------------------------------------------
     def stats(self) -> dict:
         total = self.hits + self.misses
@@ -333,4 +474,6 @@ class PlanStore:
             "hit_rate": self.hits / total if total else 0.0,
             "stored_plans": len(os.listdir(self.plans_dir)),
             "stored_cells": len(os.listdir(self.cells_dir)),
+            "pending_journal": len(os.listdir(self.journal_dir)),
+            "stored_checkpoints": len(os.listdir(self.checkpoints_dir)),
         }

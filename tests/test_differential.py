@@ -149,12 +149,24 @@ def test_ensemble_identical_across_engines(cell):
               shm=True, worker_batch=False)
     lock = run(engine="array", parallel=True, n_workers=2,
                shm=True, worker_batch=True)
+    # run-controller leg (core/run_control.py): an UNINTERRUPTED run with
+    # the controller mounted — checkpoint cadence firing into a sink —
+    # must stay bit-identical to a controller-free run (the controller
+    # reads a clock and pickles snapshots; it never touches search state)
+    from repro.core.run_control import RunController
+
+    sink = []
+    con = run(engine="array", batch=True,
+              controller=RunController(checkpoint_every=2,
+                                       checkpoint_fn=sink.append))
     assert arr == ref
     assert bat == ref
     assert par == ref
     assert exp == ref
     assert shm == ref
     assert lock == ref
+    assert con == ref
+    assert sink, "checkpoint cadence never fired"
 
 
 # ---------------------------------------------------------------------------

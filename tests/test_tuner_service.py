@@ -306,3 +306,349 @@ def test_autotune_plan_store_kwarg(tmp_path):
     assert res2.from_store
     assert res2.plan == res1.plan and res2.cost == res1.cost
     assert store.stats()["hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# PR 10: crash safety, deadlines, backpressure, degradation
+# ---------------------------------------------------------------------------
+def _ref(seed=0):
+    return autotune(CELL[0], CELL[1], algo="mcts_1s", seed=seed,
+                    n_standard=2, n_greedy=1)
+
+
+def test_tune_error_path_syncs_cache_and_releases_journal(tmp_path, monkeypatch):
+    """An exception mid-search must not drop the cell cache's progress or
+    leave journal/checkpoint state behind, and the response carries
+    structured provenance, not a bare ok=False."""
+    svc = _service(tmp_path)
+    req = canonical_request(**REQ)
+    ckey = cell_key(req)
+
+    def boom(*a, **kw):
+        kw["mdp"].cache.terminal[(1, 2, 3)] = 0.125  # progress before dying
+        raise RuntimeError("search exploded")
+
+    monkeypatch.setattr("repro.service.daemon.autotune", boom)
+    out = svc.handle(dict(REQ))
+    assert not out["ok"]
+    assert "RuntimeError: search exploded" in out["error"]
+    info = out["error_info"]
+    assert info["type"] == "RuntimeError" and info["phase"] == "search"
+    assert info["request"] == req
+    assert svc.n_errors == 1
+    # the progress the search DID make was synced to the store's cell tier
+    fresh = TranspositionCache()
+    assert svc.store.warm_cell(ckey, fresh) >= 1
+    assert fresh.terminal[(1, 2, 3)] == 0.125
+    # journal + checkpoint released: the failed request won't replay forever
+    assert svc.store.pending_requests() == []
+    assert svc.store.load_checkpoint(req) is None
+    svc.shutdown()
+
+
+def test_latency_ring_bounded_with_percentiles(tmp_path):
+    from repro.service.daemon import _LatencyRing
+
+    ring = _LatencyRing(cap=8)
+    for i in range(100):
+        ring.append(float(i))
+    assert len(ring.buf) == 8  # bounded, not 100
+    assert ring.count == 100 and ring.total == sum(range(100))
+    assert ring.percentile(0.5) in ring.buf
+    s = ring.summary()
+    assert s["count"] == 100 and s["window"] == 8
+    assert s["p50_s"] is not None and s["p99_s"] is not None
+
+    svc = _service(tmp_path, latency_window=4)
+    for _ in range(6):
+        svc.handle(dict(REQ))
+    assert len(svc.time_to_plan.buf) == 4
+    tp = svc.stats()["time_to_plan"]
+    assert tp["count"] == 6 and tp["window"] == 4
+    assert tp["p50_s"] > 0 and tp["p99_s"] > 0
+    svc.shutdown()
+
+
+def test_deadline_interrupt_then_resume_bit_identical(tmp_path):
+    """A deadlined request returns best-so-far with provenance and keeps
+    its checkpoint; the retry resumes and lands the full result — plan,
+    cost, and decisions bit-identical to an uninterrupted run."""
+    svc = _service(tmp_path, checkpoint_every=1, round_delay_s=0.05)
+    req = canonical_request(**REQ)
+    out = svc.handle(dict(REQ, deadline_s=0.12))
+    assert out["ok"] and out["served"] == "search"
+    info = out["result"]["stats"]["interrupted"]
+    assert info["reason"] == "deadline"
+    assert 0 < info["rounds_done"] < info["rounds_total"]
+    assert svc.n_interrupted == 1
+    # partial result never recorded; checkpoint kept; journal released
+    assert svc.store.lookup(req) is None
+    assert svc.store.load_checkpoint(req) is not None
+    assert svc.store.pending_requests() == []
+
+    out2 = svc.handle(dict(REQ))  # no deadline: resumes and completes
+    assert out2["ok"] and out2["served"] == "search"
+    assert "interrupted" not in out2["result"]["stats"]
+    ref = _ref()
+    assert out2["result"]["plan"] == ref.plan.to_dict()
+    assert out2["result"]["cost"] == ref.cost
+    assert out2["result"]["decisions"] == ref.decisions
+    # completion cleared the checkpoint and recorded the plan
+    assert svc.store.load_checkpoint(req) is None
+    assert svc.store.lookup(req) is not None
+    svc.shutdown()
+
+
+def test_sweep_tmp_removes_dead_writer_debris_only(tmp_path):
+    """A writer SIGKILLed between open(tmp) and os.replace orphans its
+    tmp sibling; recover()'s sweep removes exactly that debris — never a
+    live writer's in-flight tmp, never a published tier file."""
+    store = PlanStore(str(tmp_path / "store"))
+    req = canonical_request(**REQ)
+    store.journal_begin(req)  # a real published tier file
+
+    dead = os.path.join(store.checkpoints_dir, "abc.pkl.tmp.999999.deadbeef")
+    live = os.path.join(store.journal_dir,
+                        f"def.json.tmp.{os.getpid()}.cafe0123")
+    junk = os.path.join(store.plans_dir, "ghi.json.tmp.notapid.f00d")
+    for p in (dead, live, junk):
+        with open(p, "w") as f:
+            f.write("partial write")
+
+    assert store.sweep_tmp() == 2  # the dead pid and the malformed pid
+    assert not os.path.exists(dead) and not os.path.exists(junk)
+    assert os.path.exists(live)  # this process is alive: in-flight
+    assert store.pending_requests() == [req]  # tier files untouched
+    os.remove(live)
+    assert store.sweep_tmp() == 0  # idempotent once clean
+
+
+def test_recover_replays_pending_journal(tmp_path):
+    """A pending journal entry (daemon died mid-search) is replayed on
+    recover(), resuming from the checkpoint, and the landed plan is
+    bit-identical to an uninterrupted run."""
+    svc1 = _service(tmp_path, checkpoint_every=1, round_delay_s=0.05)
+    req = canonical_request(**REQ)
+    svc1.handle(dict(REQ, deadline_s=0.12))  # leaves a checkpoint behind
+    assert svc1.store.load_checkpoint(req) is not None
+    svc1.store.journal_begin(req)  # simulate dying before journal_release
+    svc1.shutdown()
+
+    svc2 = _service(tmp_path)
+    assert svc2.store.pending_requests() == [req]
+    assert svc2.recover() == 1
+    assert svc2.n_recovered == 1
+    assert svc2.store.pending_requests() == []
+    assert svc2.store.load_checkpoint(req) is None
+    hit = svc2.store.lookup(req)
+    ref = _ref()
+    assert hit is not None
+    assert hit.plan == ref.plan and hit.cost == ref.cost
+    assert hit.decisions == ref.decisions
+    # an entry whose plan already landed is released without re-running
+    svc2.store.journal_begin(req)
+    assert svc2.recover() == 0
+    assert svc2.store.pending_requests() == []
+    svc2.shutdown()
+
+
+def test_watchdog_degrades_repeatedly_restarting_pool(tmp_path):
+    """Past the restart threshold the pool is shut down and later runs go
+    sequential — same results (the engines are certified bit-identical),
+    no more worker processes to babysit."""
+    svc = _service(tmp_path, parallel=True, n_workers=2, degrade_after=3)
+    out1 = svc.handle(dict(REQ))
+    assert svc.pool is not None and not svc.degraded
+    svc.pool.n_worker_restarts = 3  # the pool has been dying repeatedly
+    out2 = svc.handle(dict(REQ, seed=1))  # this run's watchdog trips
+    assert svc.degraded and svc.pool is None
+    st = svc.stats()
+    assert st["degraded"] and st["pool_restarts"] == 3
+    out3 = svc.handle(dict(REQ, seed=2))  # served by the sequential engine
+    assert out3["ok"] and out3["served"] == "search"
+    for out, seed in ((out1, 0), (out2, 1), (out3, 2)):
+        ref = _ref(seed)
+        assert out["result"]["plan"] == ref.plan.to_dict()
+        assert out["result"]["cost"] == ref.cost
+        assert out["result"]["decisions"] == ref.decisions
+    svc.shutdown()
+
+
+def _start_server(svc, sock, **kw):
+    t = threading.Thread(target=serve_forever, args=(svc, sock), kwargs=kw,
+                         daemon=True)
+    t.start()
+    deadline = 50
+    while not os.path.exists(sock) and deadline:
+        deadline -= 1
+        threading.Event().wait(0.1)
+    return t
+
+
+def test_idle_connection_closed_not_wedging_daemon(tmp_path):
+    """A client that connects and sends nothing is closed after the read
+    timeout, and the daemon keeps serving other clients throughout."""
+    import socket as socketlib
+
+    from repro.launch.tune_serve import TuneClient
+
+    svc = _service(tmp_path)
+    sock = str(tmp_path / "tuner.sock")
+    t = _start_server(svc, sock, read_timeout_s=0.3)
+    client = TuneClient(sock)
+    silent = socketlib.socket(socketlib.AF_UNIX, socketlib.SOCK_STREAM)
+    silent.connect(sock)  # ... and says nothing
+    # the daemon answers OTHER clients while the silent one sits there
+    assert client.ping() == {"ok": True, "pong": True}
+    silent.settimeout(2.0)
+    assert silent.recv(1) == b""  # closed by the read timeout, not hung
+    silent.close()
+    assert client.ping() == {"ok": True, "pong": True}
+    out = client.call({"op": "shutdown"})
+    assert out["ok"] and out["stopping"]
+    t.join(timeout=10)
+    assert not t.is_alive()
+
+
+def test_overload_backpressure_and_graceful_shutdown(tmp_path):
+    """With a bounded queue of 1: one request in flight, one queued, and
+    every further request gets an immediate structured 'overloaded'
+    response with a retry hint — nobody hangs, nobody is dropped."""
+    from repro.launch.tune_serve import TuneClient
+
+    svc = _service(tmp_path, round_delay_s=0.08)
+    sock = str(tmp_path / "tuner.sock")
+    t = _start_server(svc, sock, queue_size=1)
+    client = TuneClient(sock)
+
+    results = {}
+
+    def submit(name, seed):
+        results[name] = client.tune(CELL[0], CELL[1], algo="mcts_1s",
+                                    seed=seed, n_standard=2, n_greedy=1)
+
+    t1 = threading.Thread(target=submit, args=("inflight", 0), daemon=True)
+    t1.start()
+    deadline = 100
+    while svc.n_requests < 1 and deadline:  # until the search is IN handle
+        deadline -= 1
+        threading.Event().wait(0.05)
+    t2 = threading.Thread(target=submit, args=("queued", 0), daemon=True)
+    t2.start()
+    deadline = 100
+    while client.stats()["stats"]["serve"]["queue_depth"] < 1 and deadline:
+        deadline -= 1
+        threading.Event().wait(0.05)
+    over1 = client.tune(CELL[0], CELL[1], algo="mcts_1s", seed=0,
+                        n_standard=2, n_greedy=1)
+    over2 = client.tune(CELL[0], CELL[1], algo="mcts_1s", seed=0,
+                        n_standard=2, n_greedy=1)
+    for over in (over1, over2):
+        assert not over["ok"] and over["error"] == "overloaded"
+        assert over["retry_after_s"] > 0
+    t1.join(timeout=30)
+    t2.join(timeout=30)
+    assert results["inflight"]["ok"] and results["inflight"]["served"] == "search"
+    assert results["queued"]["ok"] and results["queued"]["served"] == "store"
+    st = client.stats()["stats"]["serve"]
+    assert st["n_overloaded"] == 2 and st["served"] == 2
+    out = client.call({"op": "shutdown"})
+    assert out["ok"]
+    t.join(timeout=10)
+    assert not t.is_alive()
+
+
+def test_sigkill_daemon_resumes_bit_identical(tmp_path):
+    """The headline crash-safety claim: SIGKILL the daemon subprocess
+    mid-search, restart it on the same store dir, and the journaled
+    request resumes from its round-boundary checkpoint — the final
+    plan/cost/decisions are bit-identical to an uninterrupted run."""
+    import signal
+    import subprocess
+    import sys
+    import time as timelib
+
+    from repro.launch.tune_serve import TuneClient
+
+    store = str(tmp_path / "store")
+    sock = str(tmp_path / "tuner.sock")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        "src" + os.pathsep + env["PYTHONPATH"]
+        if env.get("PYTHONPATH") else "src"
+    )
+
+    def spawn(*extra):
+        return subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.tune_serve", "serve",
+             "--store", store, "--socket", sock,
+             "--checkpoint-every", "1", "--round-delay", "0.15", *extra],
+            env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+        )
+
+    proc = spawn()
+    try:
+        deadline = timelib.time() + 60
+        while not os.path.exists(sock) and timelib.time() < deadline:
+            timelib.sleep(0.05)
+        assert os.path.exists(sock), "daemon never came up"
+
+        def fire():
+            try:
+                TuneClient(sock).tune(CELL[0], CELL[1], algo="mcts_1s",
+                                      seed=0, n_standard=2, n_greedy=1)
+            except Exception:
+                pass  # the daemon dies mid-request by design
+
+        t = threading.Thread(target=fire, daemon=True)
+        t.start()
+
+        ckpt_dir = os.path.join(store, "checkpoints")
+        journal_dir = os.path.join(store, "journal")
+        deadline = timelib.time() + 60
+        while timelib.time() < deadline:
+            if os.path.exists(ckpt_dir) and os.listdir(ckpt_dir):
+                break
+            timelib.sleep(0.02)
+        assert os.listdir(ckpt_dir), "no checkpoint appeared mid-search"
+        proc.send_signal(signal.SIGKILL)  # mid-search, rounds left to go
+        proc.wait(timeout=10)
+        t.join(timeout=10)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+    # the crash left the write-ahead journal entry pending and no plan
+    assert len(os.listdir(journal_dir)) == 1
+    assert os.listdir(os.path.join(store, "plans")) == []
+
+    # restart on the same store: recovery replays the journal (resuming
+    # from the checkpoint) before accepting, so the repeat request is a
+    # store hit answered with the COMPLETE result
+    os.remove(sock)  # the SIGKILLed daemon left a stale socket file
+    proc = spawn("--max-requests", "1")
+    try:
+        deadline = timelib.time() + 60
+        while not os.path.exists(sock) and timelib.time() < deadline:
+            timelib.sleep(0.05)
+        out = TuneClient(sock, timeout=120.0).tune(
+            CELL[0], CELL[1], algo="mcts_1s", seed=0,
+            n_standard=2, n_greedy=1)
+        proc.wait(timeout=30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=10)
+
+    assert out["ok"] and out["served"] == "store"
+    ref = _ref()
+    # the socket hop JSON-serializes the plan (tuples -> lists); decode
+    # back before the bit-identity comparison
+    from repro.core.space import SchedulePlan
+
+    assert SchedulePlan.from_dict(out["result"]["plan"]) == ref.plan
+    assert out["result"]["cost"] == ref.cost
+    assert out["result"]["decisions"] == ref.decisions
+    # recovery released the journal and cleared the checkpoint
+    assert os.listdir(journal_dir) == []
+    assert os.listdir(ckpt_dir) == []
